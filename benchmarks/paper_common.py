@@ -1,0 +1,105 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Trains the B-AlexNet on the synthetic CIFAR-10 stand-in with the
+BranchyNet joint loss (exactly once -- results are cached as logits npz so
+every figure benchmark reuses the same trained network, as in the paper),
+then fits Temperature Scaling on the validation split.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import fit_temperature
+from repro.data.synthetic import cifar_like
+from repro.models import convnet
+from repro.models.convnet import B_ALEXNET
+from repro.training import optim
+from repro.training.loop import make_train_step
+
+CACHE = os.path.join("experiments", "paper", "b_alexnet_logits.npz")
+
+
+def train_and_collect(epochs: int = 6, batch: int = 256, seed: int = 0, force=False):
+    """Returns dict with val/test logits for both branches + main exit + labels."""
+    if os.path.exists(CACHE) and not force:
+        z = np.load(CACHE)
+        return {k: z[k] for k in z.files}
+
+    data = cifar_like(seed=seed)
+    key = jax.random.PRNGKey(seed)
+    params = convnet.init_params(key)
+    n_steps = epochs * (len(data.train_y) // batch)
+    # No weight decay: the conventional-training recipe the paper studies --
+    # the network memorizes ambiguous samples and becomes overconfident.
+    opt_cfg = optim.AdamWConfig(
+        lr=2e-3, weight_decay=0.0, total_steps=n_steps, warmup_steps=200
+    )
+    step_fn = jax.jit(make_train_step(B_ALEXNET, opt_cfg, remat=False))
+    state = optim.init(params)
+
+    rng = np.random.default_rng(seed)
+    ntr = len(data.train_y)
+    step = 0
+    for ep in range(epochs):
+        order = rng.permutation(ntr)
+        for s in range(0, ntr - batch + 1, batch):
+            idx = order[s : s + batch]
+            b = {
+                "images": jnp.asarray(data.train_x[idx]),
+                "labels": jnp.asarray(data.train_y[idx]),
+            }
+            params, state, metrics = step_fn(params, state, b)
+            step += 1
+        print(f"epoch {ep}: loss={float(metrics['loss']):.4f}")
+
+    @jax.jit
+    def infer(images):
+        return convnet.forward(params, images)
+
+    def collect(x):
+        outs = {"b1": [], "b2": [], "main": []}
+        for s in range(0, len(x), 512):
+            o = infer(jnp.asarray(x[s : s + 512]))
+            outs["b1"].append(np.asarray(o["exit_logits"][0]))
+            outs["b2"].append(np.asarray(o["exit_logits"][1]))
+            outs["main"].append(np.asarray(o["logits"]))
+        return {k: np.concatenate(v) for k, v in outs.items()}
+
+    val = collect(data.val_x)
+    test = collect(data.test_x)
+    out = {
+        "val_b1": val["b1"],
+        "val_b2": val["b2"],
+        "val_main": val["main"],
+        "val_y": data.val_y,
+        "test_b1": test["b1"],
+        "test_b2": test["b2"],
+        "test_main": test["main"],
+        "test_y": data.test_y,
+    }
+    os.makedirs(os.path.dirname(CACHE), exist_ok=True)
+    np.savez(CACHE, **out)
+    return out
+
+
+def temperatures(z):
+    """Fit T on validation logits for both branches (and the main exit)."""
+    t1, _ = fit_temperature(jnp.asarray(z["val_b1"]), jnp.asarray(z["val_y"]))
+    t2, _ = fit_temperature(jnp.asarray(z["val_b2"]), jnp.asarray(z["val_y"]))
+    tm, _ = fit_temperature(jnp.asarray(z["val_main"]), jnp.asarray(z["val_y"]))
+    return float(t1), float(t2), float(tm)
+
+
+# The paper sweeps p_tar up to ~0.9 because its CIFAR-10 B-AlexNet branch
+# has ~0.7-0.85 selective accuracy. Our synthetic branch is stronger
+# (selective accuracy ~0.98 at the top of its confidence range), so the
+# outage/missed-deadline knee lives higher; the grid extends to 0.99 to
+# cover the same qualitative regimes (comfortably-met .. unreachable).
+P_TAR_GRID = [
+    0.7, 0.75, 0.775, 0.8, 0.825, 0.85, 0.875, 0.9, 0.925, 0.95,
+    0.96, 0.97, 0.975, 0.98, 0.985, 0.99,
+]

@@ -1,0 +1,195 @@
+"""One benchmark per paper figure (deliverable d).
+
+Each function writes a CSV under experiments/paper/ and returns headline
+numbers used by run.py's summary and EXPERIMENTS.md's claim validation.
+
+  fig2  on-device classification probability vs p_tar   (Sec. IV-B)
+  fig3a accuracy-vs-confidence reliability curve         (Sec. IV-C)
+  fig3b on-device accuracy vs p_tar
+  fig3c overall accuracy vs p_tar
+  fig4  inference outage probability vs p_tar            (Sec. IV-D)
+  fig5  missed-deadline probability vs t_tar             (Sec. IV-E)
+  fig6  missed-deadline, two branches                    (Sec. IV-F)
+  fig7  outage one- vs two-branch                        (Sec. IV-F)
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+import numpy as np
+
+from benchmarks.paper_common import P_TAR_GRID, temperatures, train_and_collect
+from repro.core.metrics import (
+    device_statistics,
+    inference_outage_probability,
+    outage_probability_cascade,
+    overall_accuracy,
+)
+from repro.offload import latency as L
+from repro.offload.simulator import missed_deadline_curve, simulate_batches
+
+OUT = os.path.join("experiments", "paper")
+
+
+def _write(name, header, rows):
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, name), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+
+
+def fig2_offloading_probability(z, temps):
+    rows = []
+    for p_tar in P_TAR_GRID:
+        conv = device_statistics(z["test_b1"], z["test_y"], p_tar, 1.0)
+        cal = device_statistics(z["test_b1"], z["test_y"], p_tar, temps[0])
+        rows.append(
+            [p_tar, float(conv["on_device_prob"]), float(cal["on_device_prob"])]
+        )
+    _write("fig2_on_device_prob.csv", ["p_tar", "conventional", "calibrated"], rows)
+    return rows
+
+
+def fig3a_reliability(z, temps):
+    rows = []
+    for p_tar in P_TAR_GRID:
+        conv = device_statistics(z["test_b1"], z["test_y"], p_tar, 1.0)
+        cal = device_statistics(z["test_b1"], z["test_y"], p_tar, temps[0])
+        rows.append(
+            [
+                p_tar,
+                float(conv["mean_confidence"]),
+                float(conv["device_accuracy"]),
+                float(cal["mean_confidence"]),
+                float(cal["device_accuracy"]),
+            ]
+        )
+    _write(
+        "fig3a_reliability.csv",
+        ["p_tar", "conf_conv", "acc_conv", "conf_cal", "acc_cal"],
+        rows,
+    )
+    return rows
+
+
+def fig3b_device_accuracy(z, temps):
+    rows = []
+    for p_tar in P_TAR_GRID:
+        conv = device_statistics(z["test_b1"], z["test_y"], p_tar, 1.0)
+        cal = device_statistics(z["test_b1"], z["test_y"], p_tar, temps[0])
+        rows.append(
+            [p_tar, float(conv["device_accuracy"]), float(cal["device_accuracy"])]
+        )
+    _write("fig3b_device_accuracy.csv", ["p_tar", "conventional", "calibrated"], rows)
+    return rows
+
+
+def fig3c_overall_accuracy(z, temps):
+    rows = []
+    for p_tar in P_TAR_GRID:
+        conv = overall_accuracy([z["test_b1"]], z["test_main"], z["test_y"], p_tar, [1.0])
+        cal = overall_accuracy(
+            [z["test_b1"]], z["test_main"], z["test_y"], p_tar, [temps[0]]
+        )
+        rows.append([p_tar, conv, cal])
+    _write("fig3c_overall_accuracy.csv", ["p_tar", "conventional", "calibrated"], rows)
+    return rows
+
+
+def fig4_outage(z, temps):
+    rows = []
+    for p_tar in P_TAR_GRID:
+        conv = inference_outage_probability(z["test_b1"], z["test_y"], p_tar, 1.0)
+        cal = inference_outage_probability(z["test_b1"], z["test_y"], p_tar, temps[0])
+        rows.append([p_tar, conv, cal])
+    _write("fig4_outage.csv", ["p_tar", "conventional", "calibrated"], rows)
+    return rows
+
+
+T_TAR_GRID = [0.5e-3, 1e-3, 2e-3, 3e-3, 5e-3, 7.5e-3, 10e-3, 15e-3, 25e-3, 50e-3]
+
+
+def _missed_deadline(z, temps, p_tar, branches):
+    prof = L.paper_2020()
+    logits = [z["test_b1"], z["test_b2"]][: len(branches)]
+    ts = list(temps)[: len(branches)]
+    conv = simulate_batches(
+        logits, z["test_main"], z["test_y"], p_tar, [1.0] * len(branches), prof,
+        branches=branches,
+    )
+    cal = simulate_batches(
+        logits, z["test_main"], z["test_y"], p_tar, ts, prof, branches=branches
+    )
+    return (
+        missed_deadline_curve(conv, T_TAR_GRID, p_tar),
+        missed_deadline_curve(cal, T_TAR_GRID, p_tar),
+    )
+
+
+def fig5_missed_deadline(z, temps):
+    all_rows = []
+    for p_tar in (0.75, 0.825, 0.85):
+        conv, cal = _missed_deadline(z, temps, p_tar, branches=(1,))
+        for t, c1, c2 in zip(T_TAR_GRID, conv, cal):
+            all_rows.append([p_tar, t, c1, c2])
+    _write(
+        "fig5_missed_deadline_1branch.csv",
+        ["p_tar", "t_tar_s", "conventional", "calibrated"],
+        all_rows,
+    )
+    return all_rows
+
+
+def fig6_missed_deadline_two_branch(z, temps):
+    all_rows = []
+    for p_tar in (0.825, 0.85):
+        conv, cal = _missed_deadline(z, temps, p_tar, branches=(1, 2))
+        for t, c1, c2 in zip(T_TAR_GRID, conv, cal):
+            all_rows.append([p_tar, t, c1, c2])
+    _write(
+        "fig6_missed_deadline_2branch.csv",
+        ["p_tar", "t_tar_s", "conventional", "calibrated"],
+        all_rows,
+    )
+    return all_rows
+
+
+def fig7_outage_two_branch(z, temps):
+    rows = []
+    for p_tar in P_TAR_GRID:
+        c1 = outage_probability_cascade([z["test_b1"]], z["test_y"], p_tar, [1.0])
+        c2 = outage_probability_cascade(
+            [z["test_b1"], z["test_b2"]], z["test_y"], p_tar, [1.0, 1.0]
+        )
+        k1 = outage_probability_cascade([z["test_b1"]], z["test_y"], p_tar, [temps[0]])
+        k2 = outage_probability_cascade(
+            [z["test_b1"], z["test_b2"]], z["test_y"], p_tar, list(temps[:2])
+        )
+        rows.append([p_tar, c1, c2, k1, k2])
+    _write(
+        "fig7_outage_branches.csv",
+        ["p_tar", "conv_1br", "conv_2br", "cal_1br", "cal_2br"],
+        rows,
+    )
+    return rows
+
+
+def run_all(epochs: int = 6):
+    z = train_and_collect(epochs=epochs)
+    temps = temperatures(z)
+    print(f"fitted temperatures: branch1={temps[0]:.3f} branch2={temps[1]:.3f} "
+          f"main={temps[2]:.3f}")
+    results = {
+        "temps": temps,
+        "fig2": fig2_offloading_probability(z, temps),
+        "fig3a": fig3a_reliability(z, temps),
+        "fig3b": fig3b_device_accuracy(z, temps),
+        "fig3c": fig3c_overall_accuracy(z, temps),
+        "fig4": fig4_outage(z, temps),
+        "fig5": fig5_missed_deadline(z, temps),
+        "fig6": fig6_missed_deadline_two_branch(z, temps),
+        "fig7": fig7_outage_two_branch(z, temps),
+    }
+    return results

@@ -1,0 +1,41 @@
+"""Re-derive roofline cost fields from archived HLO dumps without
+recompiling: reads experiments/hlo/<stem>.hlo.zst, re-runs the cost model
+(repro.launch.hlo_cost), and updates the matching dry-run JSON in place.
+
+  PYTHONPATH=src:. python -m benchmarks.recost
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import zstandard
+
+from repro.launch.hlo_cost import analyze_text
+
+
+def main():
+    n = 0
+    for zf in sorted(glob.glob("experiments/hlo/*.hlo.zst")):
+        stem = os.path.basename(zf)[: -len(".hlo.zst")]
+        jf = os.path.join("experiments", "dryrun", stem + ".json")
+        if not os.path.exists(jf):
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(
+            open(zf, "rb").read(), max_output_size=1 << 31
+        ).decode()
+        cost = analyze_text(hlo)
+        rec = json.load(open(jf))
+        rec["flops"] = cost["flops"]
+        rec["bytes_accessed"] = cost["bytes"]
+        rec["collective_bytes"] = cost["collective_bytes"]
+        rec["collective_counts"] = cost["collective_counts"]
+        json.dump(rec, open(jf, "w"), indent=1)
+        n += 1
+        print("recosted", stem)
+    print(f"{n} records updated")
+
+
+if __name__ == "__main__":
+    main()

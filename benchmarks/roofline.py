@@ -1,0 +1,128 @@
+"""Roofline analysis (deliverable g).
+
+Reads the dry-run artifacts (experiments/dryrun/*.json) and derives the
+three roofline terms per (arch x shape x mesh). TPU v5e constants:
+
+    peak bf16    : 197 TFLOP/s per chip
+    HBM bandwidth: 819 GB/s per chip
+    ICI          : ~50 GB/s per link per chip
+
+NOTE on normalization: XLA's cost_analysis() on an SPMD-partitioned module
+reports PER-DEVICE flops/bytes (verified against an analytically-sized
+sharded matmul), and the optimized HLO is the per-device program, so
+collective operand sizes are per-device too. Hence:
+
+    compute_term    = flops / PEAK
+    memory_term     = bytes_accessed / HBM_BW
+    collective_term = collective_bytes / ICI_BW
+
+MODEL_FLOPS (useful work) per device:
+    train   : 6 * N_active * tokens / chips
+    prefill : 2 * N_active * tokens / chips
+    decode  : 2 * N_active * batch  / chips
+The ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/padding waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops_per_device(rec) -> float:
+    n = rec["active_params"]
+    from repro.configs import INPUT_SHAPES
+
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    if shape.kind == "train":
+        total = 6.0 * n * shape.seq_len * shape.global_batch
+    elif shape.kind == "prefill":
+        total = 2.0 * n * shape.seq_len * shape.global_batch
+    else:
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+def analyze(rec) -> dict:
+    comp = rec["flops"] / PEAK_FLOPS
+    mem = rec["bytes_accessed"] / HBM_BW
+    coll = sum(rec["collective_bytes"].values()) / ICI_BW
+    dom = max((comp, "compute"), (mem, "memory"), (coll, "collective"))[1]
+    mf = model_flops_per_device(rec)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": comp,
+        "memory_s": mem,
+        "collective_s": coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops": rec["flops"],
+        "useful_ratio": mf / rec["flops"] if rec["flops"] else float("nan"),
+        "collective_breakdown": rec["collective_bytes"],
+    }
+
+
+def load_all(dirname="experiments/dryrun"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(dirname="experiments/dryrun", mesh=None, variant="baseline"):
+    rows = [
+        analyze(r)
+        for r in load_all(dirname)
+        if (mesh is None or r["mesh"] == mesh)
+        and (variant is None or (r.get("variant", "baseline") == variant and not r.get("zero1")))
+    ]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful FLOPs ratio |\n|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.3f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = table(args.dir, args.mesh)
+    if args.markdown:
+        print(to_markdown(rows))
+        return
+    for r in rows:
+        print(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"comp={r['compute_s']:.3e} mem={r['memory_s']:.3e} "
+            f"coll={r['collective_s']:.3e} dom={r['dominant']:10s} "
+            f"useful={r['useful_ratio']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

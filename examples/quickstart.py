@@ -1,0 +1,100 @@
+"""Quickstart: the paper's pipeline end-to-end on CPU in ~2 minutes.
+
+1. Train a small early-exit B-AlexNet on the synthetic CIFAR-10 stand-in
+   (reduced data for speed -- benchmarks/ uses the full 45k/3k/7k split).
+2. Show the side branch is overconfident (ECE, reliability diagram).
+3. Fit Temperature Scaling on the validation split (paper Eq. 2).
+4. Build the conventional vs calibrated OffloadPolicy and compare:
+   on-device rate, device accuracy vs p_tar, inference outage.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ece,
+    fit_temperature,
+    inference_outage_probability,
+    make_policy,
+)
+from repro.core.exits import gate_statistics
+from repro.core.metrics import device_statistics
+from repro.data.synthetic import cifar_like
+from repro.models import convnet
+from repro.models.convnet import B_ALEXNET
+from repro.training import optim
+from repro.training.loop import make_train_step
+
+
+def main():
+    print("== 1. train early-exit B-AlexNet (reduced synthetic CIFAR) ==")
+    data = cifar_like(n_train=8_000, n_val=1_500, n_test=4_000, seed=0)
+    params = convnet.init_params(jax.random.PRNGKey(0))
+    opt_cfg = optim.AdamWConfig(lr=2e-3, weight_decay=1e-4, total_steps=250)
+    step = jax.jit(make_train_step(B_ALEXNET, opt_cfg, remat=False))
+    state = optim.init(params)
+    rng = np.random.default_rng(0)
+    for epoch in range(4):
+        order = rng.permutation(len(data.train_y))
+        for s in range(0, len(order) - 128 + 1, 128):
+            idx = order[s : s + 128]
+            batch = {
+                "images": jnp.asarray(data.train_x[idx]),
+                "labels": jnp.asarray(data.train_y[idx]),
+            }
+            params, state, m = step(params, state, batch)
+        print(f"  epoch {epoch}: loss={float(m['loss']):.3f}")
+
+    infer = jax.jit(lambda x: convnet.forward(params, x))
+
+    def logits_of(x):
+        outs = [infer(jnp.asarray(x[s : s + 512])) for s in range(0, len(x), 512)]
+        return (
+            np.concatenate([np.asarray(o["exit_logits"][0]) for o in outs]),
+            np.concatenate([np.asarray(o["logits"]) for o in outs]),
+        )
+
+    vb1, _ = logits_of(data.val_x)
+    tb1, tmain = logits_of(data.test_x)
+
+    print("\n== 2. miscalibration of the side branch ==")
+    conf, pred, _ = gate_statistics(tb1, 1.0)
+    correct = np.asarray(pred) == data.test_y
+    print(f"  branch-1 accuracy:        {correct.mean():.3f}")
+    print(f"  branch-1 mean confidence: {np.asarray(conf).mean():.3f}")
+    print(f"  branch-1 ECE:             {ece(np.asarray(conf), correct):.3f}")
+
+    print("\n== 3. temperature scaling (fit on validation) ==")
+    T, info = fit_temperature(jnp.asarray(vb1), jnp.asarray(data.val_y))
+    print(f"  T = {float(T):.3f}  (NLL {float(info['nll_before']):.3f} -> "
+          f"{float(info['nll_after']):.3f})")
+    confT, _, _ = gate_statistics(tb1, float(T))
+    print(f"  calibrated ECE:           {ece(np.asarray(confT), correct):.3f}")
+
+    print("\n== 4. offloading policies (paper Figs. 2/3b/4) ==")
+    print("  p_tar | on-device%  conv/cal | device-acc conv/cal | outage conv/cal")
+    for p_tar in (0.75, 0.85, 0.9):
+        sc = device_statistics(tb1, data.test_y, p_tar, 1.0)
+        sk = device_statistics(tb1, data.test_y, p_tar, float(T))
+        oc = inference_outage_probability(tb1, data.test_y, p_tar, 1.0, batch_size=256)
+        ok = inference_outage_probability(
+            tb1, data.test_y, p_tar, float(T), batch_size=256
+        )
+        print(
+            f"  {p_tar:.3f} |   {float(sc['on_device_prob']):.2f} / "
+            f"{float(sk['on_device_prob']):.2f}    |     {float(sc['device_accuracy']):.3f} / "
+            f"{float(sk['device_accuracy']):.3f}   |  {oc:.2f} / {ok:.2f}"
+        )
+    print("\ncalibrated gates keep fewer samples on-device but meet p_tar;"
+          "\nconventional gates overcommit and miss the target (the paper's point).")
+
+
+if __name__ == "__main__":
+    main()

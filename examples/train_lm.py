@@ -1,0 +1,97 @@
+"""End-to-end LM training driver (deliverable b): train an early-exit
+language model for a few hundred steps on the synthetic token stream and
+watch the exits learn (per-exit loss drops below the uniform floor), then
+calibrate the exits and serve a few tokens through the early-exit gate.
+
+Defaults to a tiny mamba2-family model for CPU; pass --preset 100m for the
+~100M-parameter configuration used on real hardware.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.core.calibration import fit_temperature
+from repro.data.pipeline import TokenIterator
+from repro.data.synthetic import lm_sequences
+from repro.launch.serve import make_serve_step
+from repro.models import registry
+from repro.training import optim
+from repro.training.loop import make_eval_step, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.preset == "100m":
+        cfg = get_config(args.arch)  # mamba2-130m is the ~100M-class config
+    else:
+        cfg = get_smoke(args.arch).replace(vocab_size=512)
+    print(f"config {cfg.name}: {cfg.param_count():,} params, exits at "
+          f"{cfg.exit_layers}")
+
+    key = jax.random.PRNGKey(0)
+    params = registry.init_params(key, cfg)
+    opt_cfg = optim.AdamWConfig(lr=1e-3, total_steps=args.steps, warmup_steps=20)
+    step = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
+    state = optim.init(params)
+
+    stream = lm_sequences(800_000, cfg.vocab_size, seed=0, order=1, branch=4)
+    it = iter(TokenIterator(stream, args.batch, args.seq))
+    floor = np.log(4)  # teacher branching factor
+    print(f"uniform loss floor: log(V)={np.log(cfg.vocab_size):.2f}; "
+          f"teacher entropy~{floor:.2f}")
+    for i in range(args.steps):
+        batch = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, state, m = step(params, state, batch)
+        if i % 25 == 0 or i == args.steps - 1:
+            exits = " ".join(
+                f"exit{j}={float(m[f'loss_exit{j}']):.3f}"
+                for j in range(len(cfg.exit_layers))
+            )
+            print(f"step {i:4d} final={float(m['loss_final']):.3f} {exits}")
+
+    # --- calibrate the exits on held-out tokens -----------------------------
+    eval_step = make_eval_step(cfg)
+    batch = next(it)
+    out = eval_step(params, {k: jnp.asarray(v) for k, v in batch.items()})
+    temps = []
+    for j, ex in enumerate(out["exit_logits"]):
+        z = ex.reshape(-1, cfg.vocab_size)
+        y = jnp.asarray(batch["labels"]).reshape(-1)
+        T, info = fit_temperature(z, y)
+        temps.append(float(T))
+        print(f"exit {j}: T={float(T):.3f} "
+              f"(NLL {float(info['nll_before']):.3f}->{float(info['nll_after']):.3f})")
+
+    # --- serve a few tokens through the calibrated early-exit gate ----------
+    serve = jax.jit(make_serve_step(cfg, temperatures=temps))
+    caches = registry.init_cache(cfg, 2, 64)
+    tok = jnp.asarray(batch["tokens"][:2, :1])
+    exited_early = 0
+    for t in range(32):
+        out, caches = serve(params, tok, caches, jnp.int32(t))
+        conf = np.asarray(out["exit_confidence"])  # (n_exits, batch)
+        exited_early += int((conf.max(0) > 0.8).sum())
+        tok = out["token"][:, None]
+    print(f"\nserved 32 tokens x 2 seqs; {exited_early}/64 token-steps cleared "
+          f"the calibrated 0.8-confidence gate at an early exit.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""The paper's contribution as a composable library.
+
+  exits        confidence gating (max-softmax / entropy) + cascades
+  calibration  Temperature Scaling (+ vector scaling, sequential cascades)
+  metrics      ECE, reliability diagrams, inference outage, missed deadline
+  policy       deployable OffloadPolicy built from a calibration pass
+  partition    adaptive partition-point selection (expected-latency optimal)
+"""
+from repro.core.calibration import fit_temperature, calibrate_cascade  # noqa: F401
+from repro.core.exits import apply_gate, cascade_gate, gate_statistics  # noqa: F401
+from repro.core.metrics import (  # noqa: F401
+    ece,
+    inference_outage_probability,
+    outage_probability_cascade,
+    overall_accuracy,
+    reliability_diagram,
+)
+from repro.core.policy import OffloadPolicy, make_policy  # noqa: F401

@@ -1,0 +1,136 @@
+"""Post-hoc calibration (paper Sec. IV-A, following Guo et al. 2017).
+
+Temperature Scaling: a single scalar T per exit, fit on validation logits by
+minimizing NLL with frozen weights (Eq. 2). The optimum is found by Newton's
+method on dNLL/d(log T) with a golden-section fallback -- both pure JAX, both
+deterministic.
+
+Beyond-paper extensions included because they slot into the same interface:
+  * vector scaling (per-class affine on logits),
+  * per-exit temperature for cascades (fit each branch on the samples that
+    *reach* it, matching deployment distribution -- Guo et al. fit on all).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def nll(logits, labels, temperature):
+    """Mean negative log-likelihood of softmax(logits/T)."""
+    z = logits.astype(jnp.float32) / temperature
+    logp = jax.nn.log_softmax(z, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def fit_temperature(
+    logits,
+    labels,
+    t_min: float = 0.05,
+    t_max: float = 20.0,
+    newton_steps: int = 30,
+) -> Tuple[float, dict]:
+    """Fit T by NLL minimization over log-T (convex in practice).
+
+    Returns (T, info). Pure JAX; jit-friendly.
+    """
+    logits = logits.astype(jnp.float32)
+
+    def loss_logt(logt):
+        return nll(logits, labels, jnp.exp(logt))
+
+    g = jax.grad(loss_logt)
+    h = jax.grad(g)
+
+    def newton_step(logt, _):
+        grad = g(logt)
+        hess = h(logt)
+        step = jnp.where(jnp.abs(hess) > 1e-8, grad / hess, jnp.sign(grad) * 0.1)
+        step = jnp.clip(step, -1.0, 1.0)
+        new = jnp.clip(logt - step, jnp.log(t_min), jnp.log(t_max))
+        return new, jnp.abs(step)
+
+    logt0 = jnp.zeros(())
+    logt, steps = jax.lax.scan(newton_step, logt0, None, length=newton_steps)
+    T = jnp.exp(logt)
+
+    # golden-section fallback if Newton walked to the boundary
+    def golden(lo, hi, iters=60):
+        phi = 0.6180339887498949
+
+        def body(carry, _):
+            lo, hi = carry
+            m1 = hi - phi * (hi - lo)
+            m2 = lo + phi * (hi - lo)
+            f1, f2 = loss_logt(m1), loss_logt(m2)
+            lo = jnp.where(f1 < f2, lo, m1)
+            hi = jnp.where(f1 < f2, m2, hi)
+            return (lo, hi), None
+
+        (lo, hi), _ = jax.lax.scan(body, (lo, hi), None, length=iters)
+        return (lo + hi) / 2
+
+    logt_g = golden(jnp.log(t_min), jnp.log(t_max))
+    T_g = jnp.exp(logt_g)
+    T_final = jnp.where(loss_logt(jnp.log(T)) <= loss_logt(logt_g), T, T_g)
+    info = {
+        "nll_before": nll(logits, labels, 1.0),
+        "nll_after": nll(logits, labels, T_final),
+        "converged_step": jnp.min(steps),
+    }
+    return T_final, info
+
+
+def fit_vector_scaling(logits, labels, steps: int = 200, lr: float = 0.05):
+    """Beyond-paper: per-class affine calibration p = softmax(w*z + b).
+
+    Gradient descent on NLL; returns (w, b, info).
+    """
+    logits = logits.astype(jnp.float32)
+    k = logits.shape[-1]
+
+    def loss(wb):
+        w, b = wb
+        z = logits * w + b
+        logp = jax.nn.log_softmax(z, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+    wb = (jnp.ones((k,)), jnp.zeros((k,)))
+    g = jax.grad(loss)
+
+    def step(wb, _):
+        grads = g(wb)
+        wb = jax.tree.map(lambda p, gg: p - lr * gg, wb, grads)
+        return wb, None
+
+    wb, _ = jax.lax.scan(step, wb, None, length=steps)
+    info = {"nll_before": loss((jnp.ones((k,)), jnp.zeros((k,)))), "nll_after": loss(wb)}
+    return wb[0], wb[1], info
+
+
+def calibrate_cascade(exit_logits_list, labels, sequential: bool = False, p_tar: float = 0.8):
+    """Fit one temperature per exit.
+
+    sequential=False (paper / Guo): each exit fit on ALL validation samples.
+    sequential=True (beyond-paper): exit i is fit only on the samples that
+    reach it under the already-calibrated earlier exits -- matching the
+    deployment-time conditional distribution of the cascade.
+    """
+    temps = []
+    reach = jnp.ones(labels.shape[0], bool)
+    for logits in exit_logits_list:
+        if sequential:
+            # fit on reached samples (mask via weighting: drop others)
+            idx = jnp.nonzero(reach, size=labels.shape[0], fill_value=0)[0]
+            T, _ = fit_temperature(logits[idx], labels[idx])
+        else:
+            T, _ = fit_temperature(logits, labels)
+        temps.append(float(T))
+        if sequential:
+            from repro.core.exits import gate_statistics
+
+            conf, _, _ = gate_statistics(logits, T)
+            reach = reach & (conf < p_tar)
+    return temps

@@ -1,0 +1,105 @@
+"""Early-exit confidence gating (paper Sec. III).
+
+Given side-branch logits z_i, the gate computes the calibrated probability
+vector p_i = softmax(z_i / T) and classifies on-device iff
+max p_i >= p_tar. An entropy criterion (BranchyNet's original rule) is also
+provided. The fused Pallas kernel in repro.kernels.exit_gate computes the
+same quantities without materializing the softmax over large vocabularies;
+this module is the jnp reference path and the public API.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class GateResult:
+    """Per-sample gate outputs (all arrays share leading batch dims)."""
+
+    confidence: jnp.ndarray  # max softmax(z/T)
+    prediction: jnp.ndarray  # argmax
+    entropy: jnp.ndarray  # entropy of softmax(z/T), nats
+    exit_mask: jnp.ndarray  # True -> classify at this exit (on-device)
+
+
+def gate_statistics(logits, temperature=1.0, use_kernel: bool = False):
+    """(confidence, prediction, entropy) of softmax(logits / T).
+
+    logits: (..., num_classes); temperature: scalar or broadcastable.
+    use_kernel: route through the fused Pallas kernel (TPU hot path).
+    """
+    if use_kernel:
+        from repro.kernels.ops import exit_gate
+
+        return exit_gate(logits, temperature)
+    z = logits.astype(jnp.float32) / temperature
+    z = z - jax.lax.stop_gradient(jnp.max(z, axis=-1, keepdims=True))
+    logp = jax.nn.log_softmax(z, axis=-1)
+    p = jnp.exp(logp)
+    confidence = jnp.max(p, axis=-1)
+    prediction = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    entropy = -jnp.sum(p * logp, axis=-1)
+    return confidence, prediction, entropy
+
+
+def apply_gate(
+    logits,
+    p_tar: float,
+    temperature=1.0,
+    criterion: str = "confidence",
+    entropy_threshold: Optional[float] = None,
+    use_kernel: bool = False,
+) -> GateResult:
+    """The paper's offloading gate.
+
+    criterion 'confidence': exit iff max softmax(z/T) >= p_tar (SPINN / paper).
+    criterion 'entropy':    exit iff H(softmax(z/T)) <= entropy_threshold
+                            (BranchyNet's rule).
+    """
+    conf, pred, ent = gate_statistics(logits, temperature, use_kernel=use_kernel)
+    if criterion == "confidence":
+        mask = conf >= p_tar
+    elif criterion == "entropy":
+        if entropy_threshold is None:
+            raise ValueError("entropy criterion needs entropy_threshold")
+        mask = ent <= entropy_threshold
+    else:
+        raise ValueError(f"unknown criterion {criterion!r}")
+    return GateResult(conf, pred, ent, mask)
+
+
+def cascade_gate(exit_logits_list, final_logits, p_tar, temperatures=None):
+    """Multi-branch cascade (paper Sec. IV-F).
+
+    Walks the exits in order; each sample is classified by the FIRST exit
+    whose confidence clears p_tar, else by the final (cloud) head.
+
+    Returns dict with:
+      exit_index: (batch,) int32, index of serving exit (len(exits) = cloud)
+      prediction: (batch,) int32
+      confidence: (batch,) float32 (of the serving head)
+    """
+    n_exits = len(exit_logits_list)
+    if temperatures is None:
+        temperatures = [1.0] * n_exits
+    batch = final_logits.shape[0]
+    exit_index = jnp.full((batch,), n_exits, jnp.int32)
+    prediction = jnp.argmax(final_logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+    fconf, _, _ = gate_statistics(final_logits)
+    confidence = fconf
+    # walk backwards so the earliest qualifying exit wins
+    for i in range(n_exits - 1, -1, -1):
+        conf, pred, _ = gate_statistics(exit_logits_list[i], temperatures[i])
+        take = conf >= p_tar
+        exit_index = jnp.where(take, i, exit_index)
+        prediction = jnp.where(take, pred, prediction)
+        confidence = jnp.where(take, conf, confidence)
+    return {
+        "exit_index": exit_index,
+        "prediction": prediction,
+        "confidence": confidence,
+    }

@@ -1,0 +1,146 @@
+"""Reliability metrics (paper Secs. II, IV-B..IV-E).
+
+  * ECE + reliability diagram (Guo et al. 2017) -- Fig. 3(a);
+  * offloading probability / on-device classification probability -- Fig. 2;
+  * on-device & overall accuracy vs p_tar -- Fig. 3(b,c);
+  * inference outage probability (paper's new metric, Sec. IV-D) -- Fig. 4;
+  * missed-deadline probability (paper's new metric, Sec. IV-E) -- Fig. 5/6
+    (latency comes from repro.offload.latency).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.exits import gate_statistics
+
+PAPER_OUTAGE_BATCH = 512  # paper: "batches with 512 images each"
+
+
+def ece(confidences, correct, n_bins: int = 15):
+    """Expected Calibration Error with equal-width confidence bins."""
+    confidences = np.asarray(confidences, np.float64)
+    correct = np.asarray(correct, np.float64)
+    bins = np.linspace(0.0, 1.0, n_bins + 1)
+    e = 0.0
+    n = len(confidences)
+    for lo, hi in zip(bins[:-1], bins[1:]):
+        m = (confidences > lo) & (confidences <= hi)
+        if m.sum() == 0:
+            continue
+        e += (m.sum() / n) * abs(correct[m].mean() - confidences[m].mean())
+    return float(e)
+
+
+def reliability_diagram(confidences, correct, n_bins: int = 15):
+    """Per-bin (mean confidence, accuracy, count) -- Fig. 3(a) data."""
+    confidences = np.asarray(confidences, np.float64)
+    correct = np.asarray(correct, np.float64)
+    bins = np.linspace(0.0, 1.0, n_bins + 1)
+    rows = []
+    for lo, hi in zip(bins[:-1], bins[1:]):
+        m = (confidences > lo) & (confidences <= hi)
+        if m.sum() == 0:
+            rows.append((0.5 * (lo + hi), np.nan, 0))
+        else:
+            rows.append((confidences[m].mean(), correct[m].mean(), int(m.sum())))
+    return rows
+
+
+def device_statistics(exit_logits, labels, p_tar, temperature=1.0):
+    """Single-branch device-side stats for one p_tar (Figs. 2, 3a, 3b).
+
+    Returns dict: on_device_prob, device_accuracy, mean_confidence.
+    """
+    conf, pred, _ = gate_statistics(exit_logits, temperature)
+    mask = conf >= p_tar
+    n_dev = jnp.sum(mask)
+    correct = (pred == labels) & mask
+    acc = jnp.where(n_dev > 0, jnp.sum(correct) / jnp.maximum(n_dev, 1), jnp.nan)
+    mean_conf = jnp.where(
+        n_dev > 0, jnp.sum(conf * mask) / jnp.maximum(n_dev, 1), jnp.nan
+    )
+    return {
+        "on_device_prob": n_dev / labels.shape[0],
+        "device_accuracy": acc,
+        "mean_confidence": mean_conf,
+    }
+
+
+def overall_accuracy(exit_logits_list, final_logits, labels, p_tar, temperatures=None):
+    """Cascade accuracy over ALL samples (device + cloud) -- Fig. 3(c)."""
+    from repro.core.exits import cascade_gate
+
+    out = cascade_gate(exit_logits_list, final_logits, p_tar, temperatures)
+    return float(jnp.mean((out["prediction"] == labels).astype(jnp.float32)))
+
+
+def inference_outage_probability(
+    exit_logits,
+    labels,
+    p_tar,
+    temperature=1.0,
+    batch_size: int = PAPER_OUTAGE_BATCH,
+    rng: np.random.Generator | None = None,
+):
+    """Paper Sec. IV-D: P(batch on-device accuracy < p_tar).
+
+    The test set is divided into batches of `batch_size`; for each batch the
+    average accuracy of the on-device-classified samples is compared to
+    p_tar. Batches where no sample exits count as no outage (nothing was
+    classified on-device, so no on-device accuracy shortfall occurred).
+    """
+    conf, pred, _ = gate_statistics(exit_logits, temperature)
+    conf = np.asarray(conf)
+    pred = np.asarray(pred)
+    labels = np.asarray(labels)
+    n = len(labels)
+    idx = np.arange(n)
+    if rng is not None:
+        idx = rng.permutation(n)
+    outages, batches = 0, 0
+    for s in range(0, n - batch_size + 1, batch_size):
+        b = idx[s : s + batch_size]
+        m = conf[b] >= p_tar
+        batches += 1
+        if m.sum() == 0:
+            continue
+        acc = (pred[b][m] == labels[b][m]).mean()
+        if acc < p_tar:
+            outages += 1
+    return outages / max(batches, 1)
+
+
+def outage_probability_cascade(
+    exit_logits_list,
+    labels,
+    p_tar,
+    temperatures=None,
+    batch_size: int = PAPER_OUTAGE_BATCH,
+):
+    """Multi-branch outage (Fig. 7): on-device = classified by ANY branch."""
+    n_exits = len(exit_logits_list)
+    if temperatures is None:
+        temperatures = [1.0] * n_exits
+    n = len(labels)
+    served = np.zeros(n, bool)
+    pred = np.zeros(n, np.int64)
+    for logits, T in zip(exit_logits_list, temperatures):
+        conf, p, _ = gate_statistics(logits, T)
+        conf, p = np.asarray(conf), np.asarray(p)
+        take = (~served) & (conf >= p_tar)
+        pred[take] = p[take]
+        served |= take
+    labels = np.asarray(labels)
+    outages, batches = 0, 0
+    for s in range(0, n - batch_size + 1, batch_size):
+        sl = slice(s, s + batch_size)
+        m = served[sl]
+        batches += 1
+        if m.sum() == 0:
+            continue
+        acc = (pred[sl][m] == labels[sl][m]).mean()
+        if acc < p_tar:
+            outages += 1
+    return outages / max(batches, 1)

@@ -1,0 +1,73 @@
+"""Adaptive partition-point selection (Neurosurgeon-style, paper Sec. I-II).
+
+Given per-layer edge/cloud compute latencies and per-boundary payload sizes,
+choose the partition layer (equivalently, which early exit to place on the
+edge) that minimizes expected end-to-end latency subject to the reliability
+target. The expected latency depends on the offloading probability at each
+candidate exit, which itself depends on the calibrated confidence
+distribution -- so the optimizer consumes measured exit statistics from a
+validation pass (the adaptive part that Edgent/DADS solve with static layer
+graphs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.exits import gate_statistics
+
+
+@dataclass
+class PartitionCandidate:
+    exit_index: int
+    partition_layer: int  # model layer after which the split happens
+    edge_time_s: float  # time to run layers [0..partition] + exit head
+    cloud_time_s: float  # time to run remaining layers on the cloud
+    payload_bytes: int  # activation size shipped when offloading
+    offload_prob: float  # P(confidence < p_tar) at this exit (calibrated)
+    expected_latency_s: float
+
+
+def expected_latency(
+    edge_time_s: float,
+    cloud_time_s: float,
+    payload_bytes: int,
+    offload_prob: float,
+    uplink_bps: float,
+) -> float:
+    comm = payload_bytes * 8.0 / uplink_bps
+    return edge_time_s + offload_prob * (comm + cloud_time_s)
+
+
+def choose_partition(
+    exit_logits_list: Sequence[np.ndarray],
+    temperatures: Sequence[float],
+    p_tar: float,
+    edge_times_s: Sequence[float],
+    cloud_times_s: Sequence[float],
+    payload_bytes: Sequence[int],
+    exit_layer_indices: Sequence[int],
+    uplink_bps: float,
+) -> List[PartitionCandidate]:
+    """Rank candidate partitions by expected latency. First entry wins."""
+    cands = []
+    for i, logits in enumerate(exit_logits_list):
+        conf, _, _ = gate_statistics(logits, temperatures[i])
+        offload_prob = float(np.mean(np.asarray(conf) < p_tar))
+        lat = expected_latency(
+            edge_times_s[i], cloud_times_s[i], payload_bytes[i], offload_prob, uplink_bps
+        )
+        cands.append(
+            PartitionCandidate(
+                exit_index=i,
+                partition_layer=exit_layer_indices[i],
+                edge_time_s=edge_times_s[i],
+                cloud_time_s=cloud_times_s[i],
+                payload_bytes=payload_bytes[i],
+                offload_prob=offload_prob,
+                expected_latency_s=lat,
+            )
+        )
+    return sorted(cands, key=lambda c: c.expected_latency_s)

@@ -1,0 +1,58 @@
+"""Offloading policy: the deployable decision object.
+
+Bundles everything the edge runtime needs to make the paper's decision:
+which exit(s) to consult, the calibrated temperature(s), the confidence
+criterion, and the target p_tar. Produced by `make_policy` from a
+calibration pass; consumed by repro.offload.engine and the simulator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.calibration import calibrate_cascade
+from repro.core.exits import apply_gate
+
+
+@dataclass
+class OffloadPolicy:
+    p_tar: float
+    temperatures: List[float]  # one per exit; 1.0 = uncalibrated
+    criterion: str = "confidence"  # confidence | entropy
+    entropy_threshold: Optional[float] = None
+    exit_index: int = 0  # which exit the single-branch paths use
+    calibrated: bool = True
+
+    def gate(self, exit_logits, branch: int = 0, use_kernel: bool = False):
+        return apply_gate(
+            exit_logits,
+            self.p_tar,
+            temperature=self.temperatures[branch],
+            criterion=self.criterion,
+            entropy_threshold=self.entropy_threshold,
+            use_kernel=use_kernel,
+        )
+
+
+def make_policy(
+    exit_logits_list,
+    labels,
+    p_tar: float,
+    calibrated: bool = True,
+    sequential: bool = False,
+) -> OffloadPolicy:
+    """Build a policy from validation logits.
+
+    calibrated=False reproduces the paper's 'conventional DNN' baseline
+    (T=1 everywhere); calibrated=True runs Temperature Scaling per exit.
+    """
+    n = len(exit_logits_list)
+    if calibrated:
+        temps = calibrate_cascade(
+            exit_logits_list, labels, sequential=sequential, p_tar=p_tar
+        )
+    else:
+        temps = [1.0] * n
+    return OffloadPolicy(p_tar=p_tar, temperatures=temps, calibrated=calibrated)

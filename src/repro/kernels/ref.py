@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exit_gate_ref(logits, temperature):
+    """(confidence, entropy, argmax) of softmax(logits / T), row-wise.
+
+    logits: (..., vocab). Float32 math throughout.
+    """
+    z = logits.astype(jnp.float32) / jnp.asarray(temperature, jnp.float32)
+    m = jnp.max(z, axis=-1, keepdims=True)
+    logp = z - m - jnp.log(jnp.sum(jnp.exp(z - m), axis=-1, keepdims=True))
+    p = jnp.exp(logp)
+    conf = jnp.max(p, axis=-1)
+    ent = -jnp.sum(p * logp, axis=-1)
+    idx = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    return conf, ent, idx
+
+
+def calib_nll_ref(logits, labels, temperature):
+    """(E_p[z], E_p[z^2], z_y, nll) per row; p = softmax(z/T)."""
+    z = logits.astype(jnp.float32)
+    t = jnp.asarray(temperature, jnp.float32)
+    u = z / t
+    m = jnp.max(u, axis=-1, keepdims=True)
+    e = jnp.exp(u - m)
+    S = jnp.sum(e, axis=-1)
+    p = e / S[..., None]
+    e1 = jnp.sum(p * z, axis=-1)
+    e2 = jnp.sum(p * z * z, axis=-1)
+    zy = jnp.take_along_axis(z, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.log(S) + m[..., 0] - zy / t
+    return e1, e2, zy, nll

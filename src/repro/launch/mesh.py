@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+Target hardware: TPU v5e pods. Single pod = 256 chips as a (data=16,
+model=16) mesh; multi-pod = 2 pods = 512 chips as (pod=2, data=16,
+model=16) where the 'pod' axis carries only data parallelism (DCN-friendly:
+gradient all-reduce is the sole cross-pod collective).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} "
+            "(dryrun.py sets --xla_force_host_platform_device_count=512)"
+        )
+    import numpy as np
+
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    import numpy as np
+
+    devices = jax.devices()[: data * model]
+    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))

@@ -1,0 +1,65 @@
+"""Serving step factories: prefill and single-token decode with the
+calibrated early-exit gate fused into the step (the paper's technique as a
+first-class serving feature).
+
+serve_step returns, besides the final logits, per-exit (confidence,
+prediction) computed from temperature-scaled side-branch logits -- the
+runtime (repro.offload.engine) uses them to stop early / route between the
+edge and cloud partitions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.exits import gate_statistics
+from repro.models import registry
+
+
+def make_prefill_step(cfg: ModelConfig, temperatures=None):
+    temps = temperatures or [1.0] * len(cfg.exit_layers)
+
+    def prefill_step(params, batch):
+        out = registry.forward_prefill(params, cfg, batch)
+        gates = [
+            gate_statistics(l[:, 0, :], t) for l, t in zip(out["exit_logits"], temps)
+        ]
+        return {
+            "logits": out["logits"],
+            "exit_confidence": jnp.stack([g[0] for g in gates], 0) if gates else jnp.zeros((0, batch["tokens"].shape[0])),
+            "exit_prediction": jnp.stack([g[1] for g in gates], 0) if gates else jnp.zeros((0, batch["tokens"].shape[0]), jnp.int32),
+            "caches": out["caches"],
+        }
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, temperatures=None):
+    """One decode token + fused exit gates. (params, token, caches, pos) ->
+    ({token, logits, exit_confidence, exit_prediction}, new_caches)."""
+    temps = temperatures or [1.0] * len(cfg.exit_layers)
+
+    def serve_step(params, token, caches, pos):
+        out, new_caches = registry.decode_step(params, cfg, token, caches, pos)
+        logits = out["logits"][:, 0, :]
+        b = token.shape[0]
+        gates = [
+            gate_statistics(l[:, 0, :], t) for l, t in zip(out["exit_logits"], temps)
+        ]
+        next_token = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+        return (
+            {
+                "token": next_token,
+                "logits": logits,
+                "exit_confidence": jnp.stack([g[0] for g in gates], 0)
+                if gates
+                else jnp.zeros((0, b)),
+                "exit_prediction": jnp.stack([g[1] for g in gates], 0)
+                if gates
+                else jnp.zeros((0, b), jnp.int32),
+            },
+            new_caches,
+        )
+
+    return serve_step

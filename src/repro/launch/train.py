@@ -1,0 +1,95 @@
+"""Training driver.
+
+Runs data-parallel + tensor-parallel training of any zoo architecture with
+the BranchyNet-style multi-exit loss. On the production pod this jits with
+the full param/opt shardings from repro.sharding; on CPU (this container)
+use --smoke to train the reduced variant of the same family end-to-end.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt /tmp/ck.msgpack
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.configs import get_config, get_smoke
+from repro.data.pipeline import TokenIterator, prefetch
+from repro.data.synthetic import lm_sequences
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import registry
+from repro.training import checkpoint, optim
+from repro.training.loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    print(f"arch={cfg.name} params={cfg.param_count():,} "
+          f"active={cfg.active_param_count():,}")
+
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    else:
+        mesh = make_debug_mesh(1, 1) if jax.device_count() == 1 else make_debug_mesh(
+            jax.device_count(), 1
+        )
+    sharding.set_mesh(mesh)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = registry.init_params(key, cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"instantiated params: {n_params:,}")
+
+    opt_cfg = optim.AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=min(20, args.steps // 5 + 1))
+    opt_state = optim.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=not args.smoke))
+
+    stream = lm_sequences(
+        max(600_000, args.batch * (args.seq + 1) * 4), cfg.vocab_size, seed=args.seed
+    )
+    it = iter(TokenIterator(stream, args.batch, args.seq, seed=args.seed))
+
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.is_encoder_decoder:
+            batch["encoder_frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model),
+                jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32,
+            )
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(
+                f"step {step:5d} loss={m['loss']:.4f} final={m['loss_final']:.4f} "
+                + " ".join(
+                    f"{k}={v:.4f}" for k, v in m.items() if k.startswith("loss_exit")
+                )
+                + f" gnorm={m['grad_norm']:.2f} ({time.time()-t0:.1f}s)"
+            )
+    if args.ckpt:
+        checkpoint.save(args.ckpt, {"params": params, "step": jnp.int32(args.steps)})
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

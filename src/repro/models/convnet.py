@@ -1,0 +1,147 @@
+"""B-AlexNet: the paper's own experimental vehicle.
+
+AlexNet adapted to 32x32 inputs and trained BranchyNet-style with early-exit
+side branches: branch 1 after the first ReLU (the paper's default single-
+branch setup, Fig. 1), branch 2 after the second ReLU (Sec. IV-F). The edge
+device runs conv1 (+ branch); the cloud runs the rest -- the partition point
+used throughout the paper's experiments.
+
+Implemented with jax.lax convolutions; NHWC layout. Dropout is omitted
+(the paper's analysis is post-training; weight decay is used instead).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# (name, kind, spec) in execution order; exits attach after relu1 / relu2.
+LAYER_TABLE = [
+    ("conv1", "conv", dict(cin=3, cout=64, k=5, pool=True)),
+    ("conv2", "conv", dict(cin=64, cout=96, k=5, pool=True)),
+    ("conv3", "conv", dict(cin=96, cout=192, k=3, pool=False)),
+    ("conv4", "conv", dict(cin=192, cout=128, k=3, pool=False)),
+    ("conv5", "conv", dict(cin=128, cout=128, k=3, pool=True)),
+    ("fc1", "fc", dict(din=128 * 4 * 4, dout=256)),
+    ("fc2", "fc", dict(din=256, dout=128)),
+    ("fc3", "fc", dict(din=128, dout=10)),
+]
+
+B_ALEXNET = ModelConfig(
+    name="b_alexnet",
+    family="convnet",
+    num_layers=8,
+    d_model=0,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=10,
+    head_dim=1,
+    use_rope=False,
+    exit_layers=(0, 1),  # after conv1-relu / conv2-relu
+    exit_loss_weights=(1.0, 1.0),
+    dtype="float32",
+    source="BranchyNet AlexNet on CIFAR-10 [Teerapittayanon+ 2016; paper Sec. III]",
+)
+
+
+def _conv_init(key, cin, cout, k):
+    w = jax.random.normal(key, (k, k, cin, cout)) * (k * k * cin) ** -0.5
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+def _fc_init(key, din, dout):
+    w = jax.random.normal(key, (din, dout)) * din ** -0.5
+    return {"w": w, "b": jnp.zeros((dout,))}
+
+
+def init_params(key, cfg: ModelConfig = B_ALEXNET):
+    ks = jax.random.split(key, len(LAYER_TABLE) + 4)
+    params = {}
+    for (name, kind, spec), k in zip(LAYER_TABLE, ks):
+        if kind == "conv":
+            params[name] = _conv_init(k, spec["cin"], spec["cout"], spec["k"])
+        else:
+            params[name] = _fc_init(k, spec["din"], spec["dout"])
+    # side branches: small conv + fc head (BranchyNet recipe)
+    params["branch1"] = {
+        "conv": _conv_init(ks[-4], 64, 32, 3),
+        "fc": _fc_init(ks[-3], 32 * 8 * 8, 10),
+    }
+    params["branch2"] = {
+        "conv": _conv_init(ks[-2], 96, 32, 3),
+        "fc": _fc_init(ks[-1], 32 * 4 * 4, 10),
+    }
+    return params
+
+
+def _conv(p, x, pool):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + p["b"]
+    y = jax.nn.relu(y)
+    if pool:
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+        )
+    return y
+
+
+def _branch(p, x):
+    y = _conv(p["conv"], x, pool=True)
+    y = y.reshape(y.shape[0], -1)
+    return y @ p["fc"]["w"] + p["fc"]["b"]
+
+
+def forward(params, images, num_branches: int = 2):
+    """images: (b, 32, 32, 3). Returns {exit_logits: [...], logits}."""
+    x = _conv(params["conv1"], images, pool=True)  # (b,16,16,64)
+    exit_logits = []
+    if num_branches >= 1:
+        exit_logits.append(_branch(params["branch1"], x))
+    x = _conv(params["conv2"], x, pool=True)  # (b,8,8,96)
+    if num_branches >= 2:
+        exit_logits.append(_branch(params["branch2"], x))
+    x = _conv(params["conv3"], x, pool=False)
+    x = _conv(params["conv4"], x, pool=False)
+    x = _conv(params["conv5"], x, pool=True)  # (b,4,4,128)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    logits = x @ params["fc3"]["w"] + params["fc3"]["b"]
+    return {"exit_logits": exit_logits, "logits": logits}
+
+
+def edge_forward(params, images, branch: int = 1):
+    """Edge partition: layers up to branch `branch` + that branch head.
+
+    Returns (branch_logits, intermediate_activation) -- the activation is the
+    offloading payload (what the paper sends over the 18.8 Mbps uplink).
+    """
+    x = _conv(params["conv1"], images, pool=True)
+    if branch == 1:
+        return _branch(params["branch1"], x), x
+    x = _conv(params["conv2"], x, pool=True)
+    return _branch(params["branch2"], x), x
+
+
+def cloud_forward(params, hidden, from_branch: int = 1):
+    """Cloud partition: remaining layers after branch `from_branch`."""
+    x = hidden
+    if from_branch == 1:
+        x = _conv(params["conv2"], x, pool=True)
+    x = _conv(params["conv3"], x, pool=False)
+    x = _conv(params["conv4"], x, pool=False)
+    x = _conv(params["conv5"], x, pool=True)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def payload_bytes(branch: int = 1) -> int:
+    """Size of the edge->cloud activation (float32), per sample."""
+    if branch == 1:
+        return 16 * 16 * 64 * 4
+    return 8 * 8 * 96 * 4

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts block: top-k routing with capacity-bounded scatter dispatch.
+
+Design notes (TPU adaptation):
+  * Dispatch is scatter/gather based, NOT the classic (tokens, experts,
+    capacity) one-hot einsum. The one-hot dispatch matmul costs
+    T*E*C*d FLOPs which at train_4k scale (1M tokens, 128 experts) would
+    dwarf the expert compute itself and wreck the useful-FLOPs ratio. The
+    scatter costs O(T*k*d) data movement instead.
+  * Expert weights are stacked (E, d, ff) and sharded on the 'model' mesh
+    axis (expert parallelism). Token activations are sharded on the data
+    axes, so XLA inserts the all-to-all at the dispatch/combine boundary --
+    exactly the collective pattern of expert-parallel serving.
+  * Capacity factor bounds the per-expert buffer: C = ceil(T*k/E * cf).
+    Overflowing tokens are dropped (combine weight 0) and flow through the
+    residual, as in Switch/GShard.
+  * Router runs in float32; the aux load-balance loss (Switch-style) is
+    returned for the training loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models.layers import cdtype
+
+
+def n_alloc_experts(cfg) -> int:
+    """Allocated expert count: padded to a multiple of 16 under the
+    shard-friendly variant so the expert dim divides the model axis
+    (e.g. granite's 40 experts -> 48; without it E=40 cannot shard on a
+    16-way axis and the expert einsum runs ~an order of magnitude too
+    replicated -- see EXPERIMENTS.md #Perf iteration log)."""
+    E = cfg.moe_num_experts
+    if cfg.moe_shard_capacity:
+        return ((E + 15) // 16) * 16
+    return E
+
+
+def init_moe(key, cfg):
+    d, E, f = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    Ea = n_alloc_experts(cfg)
+    dt = cdtype(cfg)
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": (jax.random.normal(k0, (d, E)) * s_in).astype(jnp.float32),
+        "w_up": (jax.random.normal(k2, (Ea, d, f)) * s_in).astype(dt),
+        "w_down": (jax.random.normal(k3, (Ea, f, d)) * s_out).astype(dt),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = (jax.random.normal(k1, (Ea, d, f)) * s_in).astype(dt)
+    return p
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    E, k = cfg.moe_num_experts, cfg.moe_top_k
+    c = int(n_tokens * k * cfg.moe_capacity_factor / E) + 1
+    # keep buffers MXU-aligned but never above what top-k could ever fill
+    c = min(max(c, 8), n_tokens)
+    return c
+
+
+def apply_moe(p, cfg, x):
+    """x: (..., d). Returns (y, aux) where aux has the load-balance loss."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)  # (T, d)
+    T = xt.shape[0]
+    E, k = n_alloc_experts(cfg), cfg.moe_top_k
+    C = moe_capacity(cfg, T)
+
+    # ---- router (fp32) ----
+    logits = xt.astype(jnp.float32) @ p["router"]  # (T, E_real)
+    if E > cfg.moe_num_experts:  # padded experts can never win top-k
+        pad = jnp.full((T, E - cfg.moe_num_experts), -1e30, jnp.float32)
+        logits = jnp.concatenate([logits, pad], axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- capacity assignment: position of each (token, slot) in its expert --
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat)  # (T*k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1)  # (T*k,)
+    eidx = expert_idx.reshape(T * k)
+    keep = pos < C
+    gates = gate_vals.reshape(T * k) * keep.astype(jnp.float32)
+
+    # ---- dispatch: scatter tokens into (E, C, d) buffers ----
+    safe_pos = jnp.where(keep, pos, C - 1)
+    src = jnp.repeat(xt, k, axis=0) * keep[:, None].astype(xt.dtype)
+    buf = jnp.zeros((E, C, d), xt.dtype)
+    buf = buf.at[eidx, safe_pos].add(src, mode="drop")
+    # CRITICAL sharding (opt-in; the perf-pass optimization): experts on
+    # 'model' AND capacity on the data axes. Without the 'dp' constraint on
+    # C, GSPMD replicates the expert einsum over every data shard -- 16x
+    # redundant expert FLOPs at mesh (16,16) (measured in the dry-run
+    # roofline; see EXPERIMENTS.md #Perf). Kept off in the baseline to
+    # document the delta.
+    if cfg.moe_shard_capacity:
+        buf = sharding.constrain(buf, "tp", "dp", None)
+
+    # ---- expert FFN: (E, C, d) x (E, d, f) ----
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    if cfg.mlp_type == "swiglu":
+        up = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * up
+    else:
+        up = jax.nn.gelu(up)
+    out_buf = jnp.einsum("ecf,efd->ecd", up, p["w_down"])  # (E, C, d)
+    if cfg.moe_shard_capacity:
+        out_buf = sharding.constrain(out_buf, "tp", "dp", None)
+
+    # ---- combine: gather each (token, slot)'s expert output ----
+    gathered = out_buf[eidx, safe_pos]  # (T*k, d)
+    y = jnp.sum(
+        (gathered * gates[:, None].astype(gathered.dtype)).reshape(T, k, d), axis=1
+    )
+
+    # ---- Switch load-balance aux loss ----
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = {
+        "moe_aux_loss": E * jnp.sum(frac_tokens * frac_probs),
+        "moe_dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y.reshape(orig_shape), aux

@@ -1,0 +1,101 @@
+"""Model registry: one uniform API over the zoo.
+
+Dispatches on cfg.family:
+  * convnet            -> repro.models.convnet   (the paper's B-AlexNet)
+  * audio (enc-dec)    -> repro.models.whisper
+  * everything else    -> repro.models.transformer
+
+Also provides ``input_specs``: ShapeDtypeStruct stand-ins for every model
+input of a given (cfg, shape, step-kind) -- the multi-pod dry-run lowers
+against these without allocating anything.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer, whisper
+from repro.models.layers import DTYPES
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family == "audio" or cfg.is_encoder_decoder:
+        return whisper
+    return transformer
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family == "convnet":
+        from repro.models import convnet
+
+        return convnet.init_params(key, cfg)
+    return _mod(cfg).init_params(key, cfg)
+
+
+def forward_train(params, cfg: ModelConfig, batch, remat: bool = True):
+    if cfg.family == "convnet":
+        from repro.models import convnet
+
+        return convnet.forward(params, batch["images"])
+    return _mod(cfg).forward_train(params, cfg, batch, remat=remat)
+
+
+def forward_prefill(params, cfg: ModelConfig, batch):
+    if cfg.family == "audio" or cfg.is_encoder_decoder:
+        return whisper.forward_prefill(params, cfg, batch)
+    return transformer.forward_prefill(params, cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return _mod(cfg).init_cache(cfg, batch, seq_len)
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos):
+    return _mod(cfg).decode_step(params, cfg, token, caches, pos)
+
+
+# ----------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the step the shape exercises.
+
+    train  -> {tokens, labels[, encoder_frames]}
+    prefill-> {tokens[, encoder_frames]}
+    decode -> {token (b,1), pos scalar} (+cache specs via cache_specs()).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = DTYPES[cfg.dtype]
+    i32 = jnp.int32
+    if cfg.family == "convnet":
+        return {
+            "images": jax.ShapeDtypeStruct((b, 32, 32, 3), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((b,), i32),
+        }
+    if shape.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    elif shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode
+        out = {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        out["encoder_frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dt)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the decode cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def param_specs_shapes(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)

@@ -1,0 +1,235 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor is
+a stub: ``input_specs`` provides precomputed frame embeddings of shape
+(batch, encoder_seq, d_model). This module implements the transformer
+backbone: a bidirectional encoder over frames and a causal decoder with
+cross-attention, learned absolute position embeddings, LayerNorm + GELU
+(the Whisper recipe), plus early-exit side branches on decoder blocks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_embed,
+    apply_mlp,
+    apply_norm,
+    apply_unembed,
+    cdtype,
+    init_embed,
+    init_mlp,
+    init_norm,
+    init_unembed,
+)
+
+
+def _init_enc_block(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {
+        "mixer_norm": init_norm(ks[0], cfg),
+        "attn": attn.init_attention(ks[1], cfg),
+        "ffn_norm": init_norm(ks[2], cfg),
+        "mlp": init_mlp(ks[3], cfg),
+    }
+
+
+def _init_dec_block(key, cfg):
+    ks = jax.random.split(key, 6)
+    return {
+        "mixer_norm": init_norm(ks[0], cfg),
+        "attn": attn.init_attention(ks[1], cfg),
+        "cross_norm": init_norm(ks[2], cfg),
+        "cross_attn": attn.init_attention(ks[3], cfg, cross=True),
+        "ffn_norm": init_norm(ks[4], cfg),
+        "mlp": init_mlp(ks[5], cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    dt = cdtype(cfg)
+    params: Dict[str, Any] = {
+        "embed": init_embed(ks[0], cfg),
+        "enc_pos_embed": (
+            jax.random.normal(ks[1], (cfg.encoder_seq, cfg.d_model)) * 0.02
+        ).astype(dt),
+        "pos_embed": (
+            jax.random.normal(ks[2], (cfg.max_position_embeddings, cfg.d_model)) * 0.02
+        ).astype(dt),
+        "enc_blocks": [
+            _init_enc_block(k, cfg)
+            for k in jax.random.split(ks[3], cfg.encoder_layers)
+        ],
+        "dec_blocks": [
+            _init_dec_block(k, cfg) for k in jax.random.split(ks[4], cfg.num_layers)
+        ],
+        "enc_final_norm": init_norm(ks[5], cfg),
+        "final_norm": init_norm(ks[6], cfg),
+        "lm_head": init_unembed(ks[7], cfg),
+    }
+    exit_keys = jax.random.split(ks[7], max(len(cfg.exit_layers), 1))
+    params["exits"] = [
+        {"norm": init_norm(ek, cfg), "head": init_unembed(ek, cfg)}
+        for ek in exit_keys[: len(cfg.exit_layers)]
+    ]
+    return params
+
+
+def encode(params, cfg, frames):
+    """frames: (b, enc_seq, d) stubbed frontend output -> encoder memory."""
+    x = frames + params["enc_pos_embed"][None]
+    x = sharding.constrain(x, "dp", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    for blk in params["enc_blocks"]:
+        h = apply_norm(blk["mixer_norm"], cfg, x)
+        # bidirectional: pass memory=h so no causal mask is applied
+        h, _ = attn.attention_prefill(blk["attn"], cfg, h, positions, memory=h)
+        x = x + h
+        h = apply_norm(blk["ffn_norm"], cfg, x)
+        x = x + apply_mlp(blk["mlp"], cfg, h)
+        x = sharding.constrain(x, "dp", None, None)
+    return apply_norm(params["enc_final_norm"], cfg, x)
+
+
+def _dec_block_seq(blk, cfg, x, positions, memory):
+    h = apply_norm(blk["mixer_norm"], cfg, x)
+    h, cache = attn.attention_prefill(blk["attn"], cfg, h, positions)
+    x = x + h
+    h = apply_norm(blk["cross_norm"], cfg, x)
+    h, xcache = attn.attention_prefill(blk["cross_attn"], cfg, h, positions, memory=memory)
+    x = x + h
+    h = apply_norm(blk["ffn_norm"], cfg, x)
+    x = x + apply_mlp(blk["mlp"], cfg, h)
+    return sharding.constrain(x, "dp", None, None), cache, xcache
+
+
+def forward_train(params, cfg: ModelConfig, batch, remat: bool = True):
+    """batch: {tokens (b,s), encoder_frames (b,enc_seq,d)}."""
+    memory = encode(params, cfg, batch["encoder_frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = apply_embed(params["embed"], tokens) + params["pos_embed"][:s][None]
+    x = sharding.constrain(x, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    exit_hiddens = []
+    exits = set(cfg.exit_layers)
+    block_fn = _dec_block_seq
+    if remat:
+        block_fn = jax.checkpoint(_dec_block_seq, static_argnums=(1,))
+    for i, blk in enumerate(params["dec_blocks"]):
+        x, _, _ = block_fn(blk, cfg, x, positions, memory)
+        if i in exits:
+            exit_hiddens.append(x)
+    h = apply_norm(params["final_norm"], cfg, x)
+    logits = apply_unembed(params["lm_head"], h)
+    ex_logits = []
+    for i, eh in enumerate(exit_hiddens):
+        ep = params["exits"][i]
+        ex_logits.append(
+            apply_unembed(ep["head"], apply_norm(ep["norm"], cfg, eh))
+        )
+    return {
+        "logits": sharding.constrain(logits, "dp", None, "tp"),
+        "exit_logits": ex_logits,
+        "moe_aux_loss": jnp.zeros((), jnp.float32),
+    }
+
+
+def forward_prefill(params, cfg: ModelConfig, batch):
+    """Serving prefill: encode frames + teacher-forced decoder pass.
+
+    Returns last-position logits, per-exit last-position logits, and the
+    decode caches (self-attn KV + projected cross-attn memory)."""
+    memory = encode(params, cfg, batch["encoder_frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = apply_embed(params["embed"], tokens) + params["pos_embed"][:s][None]
+    x = sharding.constrain(x, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    exits = set(cfg.exit_layers)
+    exit_hiddens = []
+    self_caches, cross_caches = [], []
+    for i, blk in enumerate(params["dec_blocks"]):
+        x, cache, xcache = _dec_block_seq(blk, cfg, x, positions, memory)
+        self_caches.append(cache)
+        cross_caches.append(xcache)
+        if i in exits:
+            exit_hiddens.append(x)
+    h = apply_norm(params["final_norm"], cfg, x[:, -1:, :])
+    logits = apply_unembed(params["lm_head"], h)
+    ex_logits = []
+    for i, eh in enumerate(exit_hiddens):
+        ep = params["exits"][i]
+        ex_logits.append(
+            apply_unembed(ep["head"], apply_norm(ep["norm"], cfg, eh[:, -1:, :]))
+        )
+    return {
+        "logits": logits,
+        "exit_logits": ex_logits,
+        "caches": {"self": self_caches, "cross": cross_caches},
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Self-attn KV caches + projected cross-attn memory caches."""
+    dt = cdtype(cfg)
+    mem_kv = {
+        "k": jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim), dt),
+    }
+    return {
+        "self": [
+            attn.init_kv_cache(cfg, batch, seq_len) for _ in range(cfg.num_layers)
+        ],
+        "cross": [jax.tree.map(jnp.copy, mem_kv) for _ in range(cfg.num_layers)],
+    }
+
+
+def prefill_cross_caches(params, cfg, frames):
+    """Encode + project cross-attn K/V once per request (serving)."""
+    memory = encode(params, cfg, frames)
+    cross = []
+    for blk in params["dec_blocks"]:
+        k = jnp.einsum("bsd,dhk->bshk", memory, blk["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", memory, blk["cross_attn"]["wv"])
+        cross.append({"k": k, "v": v})
+    return cross
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos):
+    x = apply_embed(params["embed"], token)
+    x = x + params["pos_embed"][pos][None, None, :]
+    x = sharding.constrain(x, "dp", None, None)
+    exits = set(cfg.exit_layers)
+    exit_hiddens = []
+    new_self = []
+    for i, blk in enumerate(params["dec_blocks"]):
+        h = apply_norm(blk["mixer_norm"], cfg, x)
+        h, c = attn.attention_decode(blk["attn"], cfg, h, caches["self"][i], pos)
+        new_self.append(c)
+        x = x + h
+        h = apply_norm(blk["cross_norm"], cfg, x)
+        h, _ = attn.attention_decode(
+            blk["cross_attn"], cfg, h, None, pos, memory_cache=caches["cross"][i]
+        )
+        x = x + h
+        h = apply_norm(blk["ffn_norm"], cfg, x)
+        x = x + apply_mlp(blk["mlp"], cfg, h)
+        if i in exits:
+            exit_hiddens.append(x)
+    h = apply_norm(params["final_norm"], cfg, x)
+    logits = apply_unembed(params["lm_head"], h)
+    ex_logits = []
+    for i, eh in enumerate(exit_hiddens):
+        ep = params["exits"][i]
+        ex_logits.append(apply_unembed(ep["head"], apply_norm(ep["norm"], cfg, eh)))
+    out = {"logits": logits, "exit_logits": ex_logits}
+    return out, {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,103 @@
+"""Latency models for the edge-cloud system (paper Sec. IV-E).
+
+The paper's setup:
+  * edge compute: per-layer AlexNet delays on an Intel i7 CPU, taken from
+    Colburn et al. [16];
+  * cloud compute: Google Colab K80 GPU;
+  * uplink: 18.8 Mbps average Wi-Fi rate from Hu et al. [7];
+  * communication delay = payload bytes / uplink rate.
+
+Those constants ship as the `paper_2020` profile. Because no per-layer i7
+table is printed in either paper, the edge numbers are derived from layer
+FLOPs at the i7's measured effective throughput for AlexNet conv layers
+(~12 GFLOP/s dense f32) -- the simulator consumes profiles as plain data,
+so measured tables drop in unchanged. A `tpu_v5e` profile transposes the
+same structure to intra-pod tiered serving (ICI instead of Wi-Fi).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.models.convnet import LAYER_TABLE, payload_bytes
+
+
+@dataclass(frozen=True)
+class LatencyProfile:
+    name: str
+    edge_layer_s: Dict[str, float]  # per-layer edge compute time (s/sample)
+    cloud_layer_s: Dict[str, float]  # per-layer cloud compute time (s/sample)
+    branch_s: Dict[str, float]  # per-branch head time on the edge
+    uplink_bps: float
+
+
+def _alexnet_layer_flops() -> Dict[str, float]:
+    """Per-sample forward FLOPs for the 32x32 B-AlexNet of convnet.py."""
+    flops = {}
+    hw = {"conv1": 32, "conv2": 16, "conv3": 8, "conv4": 8, "conv5": 8}
+    for name, kind, spec in LAYER_TABLE:
+        if kind == "conv":
+            s = hw[name]
+            flops[name] = 2.0 * s * s * spec["k"] ** 2 * spec["cin"] * spec["cout"]
+        else:
+            flops[name] = 2.0 * spec["din"] * spec["dout"]
+    return flops
+
+
+def paper_2020() -> LatencyProfile:
+    """The paper's constants: i7 edge, K80 cloud, 18.8 Mbps uplink."""
+    flops = _alexnet_layer_flops()
+    EDGE_GFLOPS = 12e9  # i7 effective on small convs [16]
+    CLOUD_GFLOPS = 240e9  # K80 effective (fp32, small batches)
+    edge = {k: v / EDGE_GFLOPS for k, v in flops.items()}
+    cloud = {k: v / CLOUD_GFLOPS for k, v in flops.items()}
+    branch_flops = {
+        "branch1": 2.0 * 16 * 16 * 9 * 64 * 32 + 2.0 * 32 * 8 * 8 * 10,
+        "branch2": 2.0 * 8 * 8 * 9 * 96 * 32 + 2.0 * 32 * 4 * 4 * 10,
+    }
+    branch = {k: v / EDGE_GFLOPS for k, v in branch_flops.items()}
+    return LatencyProfile(
+        name="paper_2020",
+        edge_layer_s=edge,
+        cloud_layer_s=cloud,
+        branch_s=branch,
+        uplink_bps=18.8e6,  # [7]'s Wi-Fi scenario, as used in the paper
+    )
+
+
+def tpu_v5e(edge_chips: int = 4, cloud_chips: int = 256) -> LatencyProfile:
+    """Hardware-adaptation profile: a small edge tier and a pod cloud tier
+    connected by ICI (~50 GB/s/link) -- same structure, new constants."""
+    flops = _alexnet_layer_flops()
+    EDGE = edge_chips * 197e12 * 0.3  # bf16 peak x small-batch efficiency
+    CLOUD = cloud_chips * 197e12 * 0.3
+    return LatencyProfile(
+        name="tpu_v5e",
+        edge_layer_s={k: v / EDGE for k, v in flops.items()},
+        cloud_layer_s={k: v / CLOUD for k, v in flops.items()},
+        branch_s={"branch1": 1e-7, "branch2": 1e-7},
+        uplink_bps=50e9 * 8,
+    )
+
+
+# ------------------------------------------------------------- path timings
+EDGE_LAYERS_BY_BRANCH = {1: ["conv1"], 2: ["conv1", "conv2"]}
+CLOUD_LAYERS_BY_BRANCH = {
+    1: ["conv2", "conv3", "conv4", "conv5", "fc1", "fc2", "fc3"],
+    2: ["conv3", "conv4", "conv5", "fc1", "fc2", "fc3"],
+}
+
+
+def edge_time(profile: LatencyProfile, branch: int) -> float:
+    """Per-sample time to reach + evaluate branch `branch` on the edge."""
+    t = sum(profile.edge_layer_s[l] for l in EDGE_LAYERS_BY_BRANCH[branch])
+    t += profile.branch_s[f"branch{branch}"]
+    return t
+
+
+def cloud_time(profile: LatencyProfile, from_branch: int) -> float:
+    return sum(profile.cloud_layer_s[l] for l in CLOUD_LAYERS_BY_BRANCH[from_branch])
+
+
+def comm_time(profile: LatencyProfile, from_branch: int) -> float:
+    return payload_bytes(from_branch) * 8.0 / profile.uplink_bps

@@ -1,0 +1,98 @@
+"""Batch-level offloading simulator: missed-deadline probability (Sec. IV-E)
+and the end-to-end latency bookkeeping behind Figs. 5 and 6.
+
+For each test batch (paper: 512 samples):
+  * every sample pays the edge compute up to its serving branch;
+  * samples whose (calibrated) confidence clears p_tar stop there;
+  * the rest pay uplink transfer of the partition activation + cloud compute;
+  * batch inference time = average per-sample time (the paper's "overall
+    time required to infer a batch of samples", normalized per sample so
+    t_tar is in per-sample units);
+  * a missed deadline occurs if time > t_tar OR batch accuracy (over ALL
+    samples, device + cloud) < p_tar.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.exits import gate_statistics
+from repro.offload import latency as L
+
+
+@dataclass
+class BatchOutcome:
+    time_s: float  # mean per-sample inference time
+    accuracy: float  # over all samples in the batch
+    on_device_frac: float
+
+
+def simulate_batches(
+    exit_logits_list: Sequence[np.ndarray],  # per branch, (N, C) test logits
+    final_logits: np.ndarray,  # (N, C) cloud main-exit logits
+    labels: np.ndarray,
+    p_tar: float,
+    temperatures: Sequence[float],
+    profile: L.LatencyProfile,
+    batch_size: int = 512,
+    branches: Sequence[int] = (1,),
+) -> List[BatchOutcome]:
+    """branches: which physical branches are deployed, e.g. (1,) or (1, 2)."""
+    n = len(labels)
+    n_br = len(branches)
+    conf = np.zeros((n_br, n))
+    pred = np.zeros((n_br, n), np.int64)
+    for i, logits in enumerate(exit_logits_list[:n_br]):
+        c, p, _ = gate_statistics(logits, temperatures[i])
+        conf[i], pred[i] = np.asarray(c), np.asarray(p)
+    final_pred = np.asarray(np.argmax(final_logits, axis=-1))
+
+    # per-sample serving branch: first branch clearing p_tar, else cloud (-1)
+    serve = np.full(n, -1)
+    for i in range(n_br - 1, -1, -1):
+        serve[conf[i] >= p_tar] = i
+    # note: loop descends so earliest branch wins
+
+    # per-sample latency
+    t = np.zeros(n)
+    correct = np.zeros(n, bool)
+    for i, br in enumerate(branches):
+        m = serve == i
+        t[m] = L.edge_time(profile, br)
+        # samples at branch i already paid earlier branches' edge layers:
+        for j_prev in range(i):
+            t[m] += L.edge_time(profile, branches[j_prev])  # conservative
+        correct[m] = pred[i][m] == labels[m]
+    cloud = serve == -1
+    deepest = branches[-1]
+    t_edge_all = sum(L.edge_time(profile, b) for b in branches)
+    t[cloud] = (
+        t_edge_all + L.comm_time(profile, deepest) + L.cloud_time(profile, deepest)
+    )
+    correct[cloud] = final_pred[cloud] == labels[cloud]
+
+    out = []
+    for s in range(0, n - batch_size + 1, batch_size):
+        sl = slice(s, s + batch_size)
+        out.append(
+            BatchOutcome(
+                time_s=float(t[sl].mean()),
+                accuracy=float(correct[sl].mean()),
+                on_device_frac=float((serve[sl] >= 0).mean()),
+            )
+        )
+    return out
+
+
+def missed_deadline_probability(
+    outcomes: Sequence[BatchOutcome], t_tar: float, p_tar: float
+) -> float:
+    """P(batch time > t_tar OR batch accuracy < p_tar) -- paper Sec. IV-E."""
+    miss = [o.time_s > t_tar or o.accuracy < p_tar for o in outcomes]
+    return float(np.mean(miss))
+
+
+def missed_deadline_curve(outcomes, t_tars, p_tar):
+    return [missed_deadline_probability(outcomes, t, p_tar) for t in t_tars]

@@ -1,0 +1,201 @@
+"""Sharding rules: mesh axes, rule-based parameter PartitionSpecs, and
+activation sharding constraints.
+
+Conventions (Megatron-style tensor parallelism + (pod,) data parallelism):
+  * batch dims shard on the data axes ('pod','data') when present;
+  * attention heads / ffn hidden / vocab / MoE experts / mamba channels
+    shard on the 'model' axis;
+  * norms, routers, scalar SSM params replicate.
+
+Parameter specs are assigned by *path rules* over the params pytree, so they
+can never structurally drift from the initializers: `param_specs` walks the
+actual tree. Stacked (scanned) segments have one extra leading layer dim,
+which maps to None automatically (specs are aligned to trailing dims).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------- mesh context
+_MESH: Optional[Mesh] = None
+_DP_AXES: tuple = ()
+_TP_AXIS: Optional[str] = None
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    """Install mesh for activation constraints. None disables (CPU tests)."""
+    global _MESH, _DP_AXES, _TP_AXIS
+    _MESH = mesh
+    if mesh is None:
+        _DP_AXES, _TP_AXIS = (), None
+        return
+    names = mesh.axis_names
+    _TP_AXIS = "model" if "model" in names else None
+    _DP_AXES = tuple(n for n in names if n in ("pod", "data"))
+
+
+def dp_axes():
+    return _DP_AXES
+
+
+def tp_axis():
+    return _TP_AXIS
+
+
+def _resolve(sym):
+    if sym == "dp":
+        return _DP_AXES if _DP_AXES else None
+    if sym == "tp":
+        return _TP_AXIS
+    return sym
+
+
+def _axis_size(ax) -> int:
+    if ax is None or _MESH is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= dict(zip(_MESH.axis_names, _MESH.devices.shape))[a]
+        return n
+    return dict(zip(_MESH.axis_names, _MESH.devices.shape))[ax]
+
+
+def fit_spec(spec_axes, shape) -> P:
+    """Drop sharding on dims the mesh axes don't evenly divide (e.g. a
+    global_batch=1 decode can't shard batch over 16 data shards)."""
+    fitted = []
+    for ax, dim in zip(spec_axes, shape):
+        n = _axis_size(ax)
+        fitted.append(ax if (n > 1 and dim % n == 0) else (None if n > 1 else ax))
+    return P(*fitted)
+
+
+def constrain(x, *spec_syms):
+    """with_sharding_constraint using symbolic axes ('dp', 'tp', None)."""
+    if _MESH is None:
+        return x
+    axes = [_resolve(s) for s in spec_syms]
+    spec = fit_spec(axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+# ---------------------------------------------------------- param spec rules
+# (path-regex, trailing-dim spec symbols). First match wins. The spec covers
+# the LAST len(spec) dims; any leading dims (stacked scan layers) get None.
+_RULES = [
+    (r"embed/w$", ("tp", None)),
+    (r"(lm_head|head)/w$", (None, "tp")),
+    (r"pos_embed$", (None, None)),
+    # attention
+    (r"attn.*/w[qkv]$", (None, "tp", None)),
+    (r"attn.*/b[qkv]$", ("tp", None)),
+    (r"attn.*/wo$", ("tp", None, None)),
+    (r"attn.*/(q_norm|k_norm)$", (None,)),
+    # dense mlp
+    (r"mlp/w_(gate|up)$", (None, "tp")),
+    (r"mlp/w_down$", ("tp", None)),
+    # moe (expert parallel on model axis)
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(gate|up|down)$", ("tp", None, None)),
+    # mamba
+    (r"mamba/in_proj$", (None, "tp")),
+    (r"mamba/dt_proj$", None),  # head-count width; replicate (split-proj variant)
+    (r"mamba/conv_w$", (None, "tp")),
+    (r"mamba/conv_b$", ("tp",)),
+    (r"mamba/(A_log|D|dt_bias)$", ("tp",)),
+    (r"mamba/norm_scale$", ("tp",)),
+    (r"mamba/out_proj$", ("tp", None)),
+    # convnet (paper's B-AlexNet): small; replicate
+    (r"conv\d*/(w|b)$", None),
+    (r"fc\d*/(w|b)$", None),
+    # norms and everything else: replicate
+    (r".*", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for(path_str: str, shape) -> P:
+    ndim = len(shape)
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            if spec is None:
+                return P()
+            spec = [_resolve(s) for s in spec]
+            if ndim < len(spec):
+                return P()
+            pad = [None] * (ndim - len(spec))
+            return fit_spec(pad + spec, shape)
+    return P()
+
+
+def param_specs(params):
+    """PartitionSpec pytree matching `params` (call inside set_mesh context)."""
+
+    def f(path, leaf):
+        return spec_for(_path_str(path), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def named_shardings(params, mesh: Mesh):
+    set_mesh(mesh)
+    specs = param_specs(params)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ------------------------------------------------------------ decode caches
+def cache_specs_tree(cache_shapes, batch_sharded: bool = True):
+    """PartitionSpecs for a decode cache pytree (from registry.cache_specs).
+
+    batch_sharded=True: shard the cache batch dim over the data axes (the
+    decode_32k regime). batch_sharded=False (long_500k, global_batch=1):
+    shard the KV *sequence* dim over the data axes instead -- distributed
+    flash-decode; softmax over the sharded axis lowers to an all-reduce.
+    """
+    b = _DP_AXES if (batch_sharded and _DP_AXES) else None
+    s = None if batch_sharded else (_DP_AXES if _DP_AXES else None)
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        if ps.endswith("conv"):
+            spec = [b, None, _TP_AXIS]
+        elif ps.endswith("ssd"):
+            spec = [b, _TP_AXIS, None, None]
+        else:  # k / v KV caches: (batch, L, kv_heads, head_dim)
+            spec = [b, s, _TP_AXIS, None]
+        if nd < len(spec):
+            spec = spec[-nd:] if nd else []
+        pad = [None] * (nd - len(spec))
+        return fit_spec(pad + spec, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def batch_specs_tree(batch_shapes):
+    """PartitionSpecs for model inputs: batch dim on data axes, rest replicated."""
+    b = _DP_AXES if _DP_AXES else None
+
+    def f(path, leaf):
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        return fit_spec([b] + [None] * (nd - 1), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, batch_shapes)

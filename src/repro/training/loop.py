@@ -1,0 +1,59 @@
+"""Training step factories: jitted, sharding-annotated train steps.
+
+`make_train_step(cfg, opt_cfg)` builds the (params, opt_state, batch) ->
+(params, opt_state, metrics) step for any zoo architecture (LM families via
+registry.forward_train; the convnet via its own image loss). The launcher
+jits it with in/out shardings from repro.sharding + optim.state_specs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.training import optim
+from repro.training.losses import multi_exit_loss, softmax_xent
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: bool = True):
+    out = registry.forward_train(params, cfg, batch, remat=remat)
+    if cfg.family == "convnet":
+        labels = batch["labels"]
+        final = softmax_xent(out["logits"], labels)
+        loss = final
+        metrics = {"loss_final": final}
+        for i, (ex, w) in enumerate(zip(out["exit_logits"], cfg.exit_loss_weights)):
+            li = softmax_xent(ex, labels)
+            loss = loss + w * li
+            metrics[f"loss_exit{i}"] = li
+        metrics["loss"] = loss
+        return loss, metrics
+    return multi_exit_loss(
+        out, batch["labels"], cfg.exit_loss_weights, cfg.moe_aux_loss_weight
+    )
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.AdamWConfig, remat: bool = True):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch, remat
+        )
+        params, opt_state, opt_metrics = optim.update(opt_cfg, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """Returns per-sample (exit_logits list, final logits) for calibration."""
+
+    @jax.jit
+    def eval_step(params, batch):
+        out = registry.forward_train(params, cfg, batch, remat=False)
+        return {"logits": out["logits"], "exit_logits": out["exit_logits"]}
+
+    return eval_step

@@ -1,0 +1,37 @@
+"""Losses: BranchyNet-style joint multi-exit objective.
+
+L = L_final + sum_i w_i * L_exit_i  (+ moe aux)   [Teerapittayanon+ 2016,
+the training recipe the paper uses for B-AlexNet; identical form for the
+LM architectures with next-token CE.]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy. logits (..., C), labels (...) int32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def multi_exit_loss(outputs, labels, exit_weights, moe_aux_weight: float = 0.01):
+    """outputs: {logits, exit_logits, [moe_aux_loss]}.
+
+    Returns (scalar loss, metrics dict).
+    """
+    final = softmax_xent(outputs["logits"], labels)
+    loss = final
+    metrics = {"loss_final": final}
+    for i, (ex, w) in enumerate(zip(outputs["exit_logits"], exit_weights)):
+        li = softmax_xent(ex, labels)
+        loss = loss + w * li
+        metrics[f"loss_exit{i}"] = li
+    aux = outputs.get("moe_aux_loss", None)
+    if aux is not None:
+        loss = loss + moe_aux_weight * aux
+        metrics["moe_aux"] = aux
+    metrics["loss"] = loss
+    return loss, metrics

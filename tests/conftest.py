@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run, and only the
+# dry-run, forces 512 placeholder devices -- see launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

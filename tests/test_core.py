@@ -1,0 +1,180 @@
+"""Core library: gating, temperature scaling, metrics. Includes
+hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    apply_gate,
+    cascade_gate,
+    ece,
+    fit_temperature,
+    gate_statistics,
+    inference_outage_probability,
+    make_policy,
+)
+from repro.core.calibration import nll
+
+
+# ------------------------------------------------------------------ gating
+def test_gate_statistics_match_softmax():
+    z = jax.random.normal(jax.random.PRNGKey(0), (16, 10)) * 3
+    conf, pred, ent = gate_statistics(z, 1.0)
+    p = jax.nn.softmax(z, -1)
+    np.testing.assert_allclose(conf, jnp.max(p, -1), rtol=1e-6)
+    np.testing.assert_array_equal(pred, jnp.argmax(z, -1))
+    np.testing.assert_allclose(
+        ent, -jnp.sum(p * jnp.log(p + 1e-30), -1), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    st.integers(2, 30),  # classes
+    st.floats(0.1, 10.0),  # temperature
+    st.integers(0, 2**31 - 1),
+)
+def test_property_temperature_monotone_confidence(c, t, seed):
+    """T>1 softens: confidence at T >= 1 is <= confidence at T=1 <= at T<1.
+    Also prediction is temperature-invariant."""
+    z = jax.random.normal(jax.random.PRNGKey(seed), (8, c)) * 4
+    c1, p1, _ = gate_statistics(z, 1.0)
+    ct, pt, _ = gate_statistics(z, t)
+    np.testing.assert_array_equal(p1, pt)
+    if t >= 1.0:
+        assert bool(jnp.all(ct <= c1 + 1e-6))
+    else:
+        assert bool(jnp.all(ct >= c1 - 1e-6))
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 20), st.integers(0, 2**31 - 1), st.floats(0.3, 0.99))
+def test_property_gate_mask_iff_confidence(c, seed, p_tar):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (32, c)) * 2
+    res = apply_gate(z, p_tar)
+    np.testing.assert_array_equal(res.exit_mask, res.confidence >= p_tar)
+
+
+def test_cascade_earliest_exit_wins():
+    b, c = 6, 5
+    # exit0 very confident for first 3 samples, exit1 confident for next 2
+    e0 = np.full((b, c), 0.0, np.float32)
+    e0[:3, 0] = 50.0
+    e1 = np.full((b, c), 0.0, np.float32)
+    e1[:5, 1] = 50.0
+    f = np.zeros((b, c), np.float32)
+    f[:, 2] = 50.0
+    out = cascade_gate([jnp.asarray(e0), jnp.asarray(e1)], jnp.asarray(f), 0.9)
+    np.testing.assert_array_equal(np.asarray(out["exit_index"]), [0, 0, 0, 1, 1, 2])
+    np.testing.assert_array_equal(np.asarray(out["prediction"]), [0, 0, 0, 1, 1, 2])
+
+
+# ------------------------------------------------------------- calibration
+def _make_overconfident_logits(key, n=4000, c=10, scale=8.0, acc=0.7):
+    """Synthetic overconfident classifier: correct with prob `acc` but
+    logit margins imply much higher confidence."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.randint(k1, (n,), 0, c)
+    correct = jax.random.uniform(k2, (n,)) < acc
+    pred = jnp.where(
+        correct, labels, (labels + 1 + jax.random.randint(k3, (n,), 0, c - 1)) % c
+    )
+    z = jax.random.normal(k3, (n, c))
+    z = z.at[jnp.arange(n), pred].add(scale)
+    return z, labels
+
+
+def test_temperature_scaling_reduces_nll_and_ece():
+    z, y = _make_overconfident_logits(jax.random.PRNGKey(0))
+    T, info = fit_temperature(z, y)
+    assert float(T) > 1.5  # overconfident -> needs softening
+    assert float(info["nll_after"]) < float(info["nll_before"]) - 0.05
+    conf1, pred, _ = gate_statistics(z, 1.0)
+    confT, _, _ = gate_statistics(z, T)
+    correct = np.asarray(pred == y)
+    assert ece(confT, correct) < ece(conf1, correct) - 0.02
+
+
+def test_fit_temperature_identity_when_calibrated():
+    """Logits that are already log-probs of the true generative process
+    should get T close to 1."""
+    key = jax.random.PRNGKey(1)
+    n, c = 8000, 5
+    logp = jax.nn.log_softmax(jax.random.normal(key, (n, c)) * 1.5)
+    labels = jax.random.categorical(jax.random.PRNGKey(2), logp)
+    T, _ = fit_temperature(logp, labels)
+    assert 0.9 < float(T) < 1.15
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.floats(1.5, 6.0), st.integers(0, 2**31 - 1))
+def test_property_fit_recovers_planted_temperature(t_true, seed):
+    """If data is generated from softmax(z/T*), fitting on z recovers ~T*."""
+    key = jax.random.PRNGKey(seed)
+    n, c = 6000, 8
+    z = jax.random.normal(key, (n, c)) * 3
+    labels = jax.random.categorical(jax.random.PRNGKey(seed ^ 1), z / t_true)
+    T, _ = fit_temperature(z, labels)
+    assert abs(float(T) - t_true) / t_true < 0.25
+
+
+def test_nll_convex_minimum_interior():
+    z, y = _make_overconfident_logits(jax.random.PRNGKey(3))
+    T, _ = fit_temperature(z, y)
+    for delta in (0.8, 1.25):
+        assert float(nll(z, y, T)) <= float(nll(z, y, T * delta)) + 1e-6
+
+
+# ---------------------------------------------------------------- metrics
+def test_outage_probability_calibrated_lower():
+    """The paper's headline: calibrated branch has lower outage."""
+    z, y = _make_overconfident_logits(jax.random.PRNGKey(4), n=14336)
+    T, _ = fit_temperature(z, y)
+    p_tar = 0.85
+    out_conv = inference_outage_probability(z, y, p_tar, 1.0)
+    out_cal = inference_outage_probability(z, y, p_tar, float(T))
+    assert out_cal <= out_conv
+    assert out_conv > 0.5  # overconfident model misses the target often
+
+
+def test_make_policy_conventional_vs_calibrated():
+    z, y = _make_overconfident_logits(jax.random.PRNGKey(5))
+    pol_conv = make_policy([z], y, p_tar=0.8, calibrated=False)
+    pol_cal = make_policy([z], y, p_tar=0.8, calibrated=True)
+    assert pol_conv.temperatures == [1.0]
+    assert pol_cal.temperatures[0] > 1.2
+    # calibration lowers on-device rate for overconfident nets (Fig. 2)
+    g_conv = pol_conv.gate(z)
+    g_cal = pol_cal.gate(z)
+    assert int(g_cal.exit_mask.sum()) < int(g_conv.exit_mask.sum())
+
+
+def test_ece_perfect_and_worst():
+    conf = np.array([0.8] * 100)
+    assert ece(conf, np.array([1.0] * 80 + [0.0] * 20)) < 0.01
+    assert ece(conf, np.array([0.0] * 100)) > 0.75
+
+
+def test_vector_scaling_reduces_nll():
+    from repro.core.calibration import fit_vector_scaling
+
+    z, y = _make_overconfident_logits(jax.random.PRNGKey(9))
+    w, b, info = fit_vector_scaling(z, y)
+    assert float(info["nll_after"]) < float(info["nll_before"])
+    assert w.shape == (10,) and b.shape == (10,)
+
+
+def test_sequential_cascade_calibration():
+    """Beyond-paper: exit i fit only on samples that reach it."""
+    from repro.core.calibration import calibrate_cascade
+
+    key = jax.random.PRNGKey(10)
+    z0, y = _make_overconfident_logits(key, n=3000)
+    z1, _ = _make_overconfident_logits(jax.random.PRNGKey(11), n=3000, acc=0.9)
+    temps_all = calibrate_cascade([z0, z1], y, sequential=False)
+    temps_seq = calibrate_cascade([z0, z1], y, sequential=True, p_tar=0.8)
+    assert len(temps_all) == len(temps_seq) == 2
+    assert temps_all[0] == temps_seq[0]  # first exit sees all samples
+    assert all(t > 1.0 for t in temps_all)  # overconfident -> soften

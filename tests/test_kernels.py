@@ -1,0 +1,129 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracle
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import exit_gate
+from repro.kernels.ref import exit_gate_ref
+
+
+@pytest.mark.parametrize("rows", [1, 3, 8, 17, 64])
+@pytest.mark.parametrize("vocab", [10, 128, 512, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_exit_gate_shape_dtype_sweep(rows, vocab, dtype):
+    key = jax.random.PRNGKey(rows * 10007 + vocab)
+    z = (jax.random.normal(key, (rows, vocab)) * 6).astype(dtype)
+    conf, pred, ent = exit_gate(z, 1.0)
+    rconf, rent, rpred = exit_gate_ref(z, 1.0)
+    np.testing.assert_allclose(conf, rconf, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(ent, rent, rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(pred, rpred)
+
+
+@pytest.mark.parametrize("temp", [0.25, 1.0, 2.0, 7.5])
+def test_exit_gate_temperatures(temp):
+    z = jax.random.normal(jax.random.PRNGKey(0), (16, 1536)) * 4
+    conf, pred, ent = exit_gate(z, temp)
+    rconf, rent, rpred = exit_gate_ref(z, temp)
+    np.testing.assert_allclose(conf, rconf, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(ent, rent, rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(pred, rpred)
+
+
+def test_exit_gate_leading_dims():
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 5, 700)) * 3
+    conf, pred, ent = exit_gate(z, 1.3)
+    rconf, rent, rpred = exit_gate_ref(z, 1.3)
+    assert conf.shape == (2, 3, 5)
+    np.testing.assert_allclose(conf, rconf, rtol=2e-5, atol=1e-6)
+    np.testing.assert_array_equal(pred, rpred)
+
+
+def test_exit_gate_extreme_logits():
+    """Online-softmax must be stable for huge magnitude logits."""
+    z = jnp.array([[1e4, -1e4, 0.0, 500.0] + [0.0] * 124], jnp.float32)
+    conf, pred, ent = exit_gate(z, 1.0)
+    assert not bool(jnp.isnan(conf).any() | jnp.isnan(ent).any())
+    np.testing.assert_allclose(conf, [1.0], atol=1e-6)
+    assert int(pred[0]) == 0
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    st.integers(1, 12),
+    st.integers(2, 900),
+    st.floats(0.2, 5.0),
+    st.integers(0, 2**31 - 1),
+)
+def test_property_exit_gate_matches_ref(rows, vocab, temp, seed):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) * 5
+    conf, pred, ent = exit_gate(z, temp)
+    rconf, rent, rpred = exit_gate_ref(z, temp)
+    np.testing.assert_allclose(conf, rconf, rtol=5e-5, atol=1e-6)
+    np.testing.assert_allclose(ent, rent, rtol=5e-5, atol=5e-5)
+    np.testing.assert_array_equal(pred, rpred)
+    # invariants: conf in (0,1]; entropy in [0, log V]; conf=1 -> ent~0
+    assert bool(jnp.all((conf > 0) & (conf <= 1 + 1e-6)))
+    assert bool(jnp.all((ent >= -1e-5) & (ent <= np.log(vocab) + 1e-4)))
+
+
+def test_core_gate_kernel_path_equals_jnp_path():
+    from repro.core.exits import gate_statistics
+
+    z = jax.random.normal(jax.random.PRNGKey(2), (32, 50280)) * 4
+    c1, p1, e1 = gate_statistics(z, 1.7, use_kernel=False)
+    c2, p2, e2 = gate_statistics(z, 1.7, use_kernel=True)
+    np.testing.assert_allclose(c1, c2, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(e1, e2, rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(p1, p2)
+
+
+# ---------------------------------------------------------------- calib_nll
+class TestCalibNllKernel:
+    """Kernel #2: fused one-pass Temperature-Scaling Newton statistics."""
+
+    @pytest.mark.parametrize("rows,vocab", [(5, 130), (16, 512), (37, 700), (3, 50280)])
+    @pytest.mark.parametrize("temp", [0.5, 1.0, 2.7])
+    def test_matches_ref_and_autodiff(self, rows, vocab, temp):
+        from repro.core.calibration import nll as nll_ref
+        from repro.kernels.ops import calib_stats
+        from repro.kernels.ref import calib_nll_ref
+
+        key = jax.random.PRNGKey(rows * 131 + vocab)
+        z = jax.random.normal(key, (rows, vocab)) * 4
+        y = jax.random.randint(jax.random.PRNGKey(1), (rows,), 0, vocab)
+        n, d1, d2 = calib_stats(z, y, temp)
+        e1, e2, zy, nll_rows = calib_nll_ref(z, y, temp)
+        np.testing.assert_allclose(float(n), float(jnp.mean(nll_rows)), rtol=1e-5)
+        np.testing.assert_allclose(float(n), float(nll_ref(z, y, temp)), rtol=1e-5)
+        g = jax.grad(lambda t: nll_ref(z, y, t))(jnp.float32(temp))
+        h = jax.grad(jax.grad(lambda t: nll_ref(z, y, t)))(jnp.float32(temp))
+        np.testing.assert_allclose(float(d1), float(g), rtol=5e-3, atol=1e-5)
+        np.testing.assert_allclose(float(d2), float(h), rtol=5e-3, atol=1e-3)
+
+    def test_newton_fit_matches_reference_fitter(self):
+        from repro.core.calibration import fit_temperature
+        from repro.kernels.ops import fit_temperature_kernel
+
+        key = jax.random.PRNGKey(7)
+        z = jax.random.normal(key, (4000, 50)) * 3
+        y = jax.random.categorical(jax.random.PRNGKey(8), z / 2.5)
+        t_k, _ = fit_temperature_kernel(z, y)
+        t_r, _ = fit_temperature(z, y)
+        assert abs(float(t_k) - float(t_r)) < 0.05
+        assert 2.2 < float(t_k) < 2.9  # planted T* = 2.5
+
+    @settings(deadline=None, max_examples=15)
+    @given(st.integers(2, 10), st.integers(3, 400), st.floats(0.3, 4.0),
+           st.integers(0, 2**31 - 1))
+    def test_property_nll_matches(self, rows, vocab, temp, seed):
+        from repro.core.calibration import nll as nll_ref
+        from repro.kernels.ops import calib_stats
+
+        z = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) * 5
+        y = jax.random.randint(jax.random.PRNGKey(seed ^ 3), (rows,), 0, vocab)
+        n, _, _ = calib_stats(z, y, temp)
+        np.testing.assert_allclose(float(n), float(nll_ref(z, y, temp)), rtol=5e-5)

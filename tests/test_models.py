@@ -1,0 +1,202 @@
+"""Model correctness: prefill/decode equivalence, SSD scan vs recurrence,
+sliding-window semantics, GQA vs MHA reference, MoE properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mb
+from repro.models import registry
+
+
+def _f32(arch, **kw):
+    return get_smoke(arch).replace(dtype="float32", **kw)
+
+
+@pytest.mark.parametrize(
+    "arch,kw",
+    [
+        ("qwen3-8b", {}),
+        ("qwen2-72b", {}),  # qkv bias
+        ("olmo-1b", {}),  # non-parametric LN
+        ("mamba2-130m", {}),
+        ("jamba-v0.1-52b", {"moe_capacity_factor": 8.0}),
+        ("granite-moe-3b-a800m", {"moe_capacity_factor": 8.0}),
+        ("qwen2-72b", {"sliding_window": 8}),
+    ],
+)
+def test_prefill_decode_equivalence(arch, kw):
+    """Stepwise decode must reproduce teacher-forced prefill logits."""
+    cfg = _f32(arch, **kw)
+    key = jax.random.PRNGKey(0)
+    params = registry.init_params(key, cfg)
+    b, s = 2, 16
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    full = registry.forward_train(params, cfg, {"tokens": toks}, remat=False)
+    caches = registry.init_cache(cfg, b, s)
+    outs = []
+    for t in range(s):
+        out, caches = registry.decode_step(
+            params, cfg, toks[:, t : t + 1], caches, jnp.int32(t)
+        )
+        outs.append(out["logits"][:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, full["logits"], rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    """The chunked SSD scan equals the O(s) per-step recurrence."""
+    key = jax.random.PRNGKey(0)
+    b, s, h, p, g, n = 2, 32, 4, 8, 2, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+    D = jnp.zeros((h,))
+
+    y_chunk, S_chunk = mb.ssd_chunked(x, dt, A, B, C, D, chunk=8)
+
+    # naive recurrence
+    hg = h // g
+    Bh = jnp.repeat(B, hg, axis=2)
+    Ch = jnp.repeat(C, hg, axis=2)
+    S = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(-dt[:, t] * A)  # (b,h)
+        S = S * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t], Bh[:, t], x[:, t]
+        )
+        ys.append(jnp.einsum("bhn,bhpn->bhp", Ch[:, t], S))
+    y_naive = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_chunk, y_naive, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(S_chunk, S, rtol=1e-4, atol=1e-4)
+
+
+def test_sliding_window_prefill_masks_old_tokens():
+    """With window w, logits at position t must not depend on tokens < t-w+1."""
+    cfg = _f32("qwen3-8b", sliding_window=4, num_layers=2)
+    key = jax.random.PRNGKey(0)
+    params = registry.init_params(key, cfg)
+    b, s = 1, 12
+    t1 = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0:4].set((t1[:, 0:4] + 7) % cfg.vocab_size)  # perturb old tokens
+    o1 = registry.forward_train(params, cfg, {"tokens": t1}, remat=False)["logits"]
+    o2 = registry.forward_train(params, cfg, {"tokens": t2}, remat=False)["logits"]
+    # last position attends to [s-4, s): identical in both inputs
+    np.testing.assert_allclose(o1[:, -1], o2[:, -1], rtol=1e-5, atol=1e-5)
+    # an early position inside the perturbed window must differ
+    assert float(jnp.max(jnp.abs(o1[:, 3] - o2[:, 3]))) > 1e-4
+
+
+def test_chunked_attention_matches_unchunked():
+    cfg = _f32("qwen3-8b", num_layers=1)
+    key = jax.random.PRNGKey(1)
+    p = attn_mod.init_attention(key, cfg)
+    b, s = 2, 64
+    x = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32) * 0.1
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    o1, _ = attn_mod.attention_prefill(p, cfg, x, pos, q_chunk=s)
+    o2, _ = attn_mod.attention_prefill(p, cfg, x, pos, q_chunk=16)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_reduces_to_mha_reference():
+    """GQA with kv_heads == num_heads equals straightforward MHA."""
+    cfg = _f32("olmo-1b", num_layers=1)  # kv == heads
+    key = jax.random.PRNGKey(2)
+    p = attn_mod.init_attention(key, cfg)
+    b, s, hd = 1, 8, cfg.head_dim
+    x = jax.random.normal(key, (b, s, cfg.d_model)) * 0.1
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    out, _ = attn_mod.attention_prefill(p, cfg, x, pos)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    from repro.models.layers import rope_freqs, apply_rope
+
+    cos, sin = rope_freqs(cfg, pos)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    ref = jnp.einsum("bhqs,bshk->bqhk", jax.nn.softmax(scores, -1), v)
+    ref = jnp.einsum("bshk,hkd->bsd", ref, p["wo"])
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_routes_topk_and_balances():
+    from repro.models.moe import apply_moe, init_moe
+
+    cfg = _f32("qwen3-moe-30b-a3b")
+    key = jax.random.PRNGKey(3)
+    p = init_moe(key, cfg)
+    x = jax.random.normal(key, (4, 8, cfg.d_model)) * 0.5
+    y, aux = apply_moe(p, cfg, x)
+    assert y.shape == x.shape
+    assert float(aux["moe_aux_loss"]) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz
+    assert 0.0 <= float(aux["moe_dropped_frac"]) <= 1.0
+
+
+def test_moe_zero_router_is_uniform_mixture():
+    """With identical experts, MoE output must equal that single expert's MLP."""
+    from repro.models.moe import apply_moe, init_moe
+
+    cfg = _f32("granite-moe-3b-a800m", moe_capacity_factor=10.0)
+    key = jax.random.PRNGKey(4)
+    p = init_moe(key, cfg)
+    # make all experts identical
+    p = dict(p)
+    for k in ("w_up", "w_down", "w_gate"):
+        if k in p:
+            p[k] = jnp.broadcast_to(p[k][:1], p[k].shape)
+    x = jax.random.normal(key, (2, 4, cfg.d_model)) * 0.5
+    y, _ = apply_moe(p, cfg, x)
+    up = jax.nn.silu(x @ p["w_gate"][0]) * (x @ p["w_up"][0])
+    ref = up @ p["w_down"][0]
+    np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-130m", "jamba-v0.1-52b"])
+def test_decode_unroll_matches_scan(arch):
+    """The perf-pass unrolled decode (in-place stacked cache) is exact."""
+    cfg = _f32(arch)
+    cfg_u = cfg.replace(decode_unroll=True)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    b, L = 2, 32
+    c1 = registry.init_cache(cfg, b, L)
+    c2 = jax.tree.map(jnp.copy, c1)
+    tok = jnp.ones((b, 1), jnp.int32)
+    o1, c1 = registry.decode_step(params, cfg, tok, c1, jnp.int32(0))
+    o2, c2 = registry.decode_step(params, cfg_u, tok, c2, jnp.int32(0))
+    o1b, _ = registry.decode_step(params, cfg, tok, c1, jnp.int32(1))
+    o2b, _ = registry.decode_step(params, cfg_u, tok, c2, jnp.int32(1))
+    np.testing.assert_allclose(o1b["logits"], o2b["logits"], atol=1e-5)
+
+
+def test_moe_shard_capacity_same_numerics_with_padded_experts():
+    """The shard-friendly variant (experts padded to a multiple of 16 +
+    capacity sharding constraints) must not change numerics: padded
+    experts get -inf router logits and zero weights."""
+    from repro.models.moe import apply_moe, init_moe, n_alloc_experts
+
+    cfg = _f32("granite-moe-3b-a800m", moe_num_experts=6, moe_top_k=2,
+               moe_capacity_factor=8.0)
+    cfg_p = cfg.replace(moe_shard_capacity=True)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    Ea = n_alloc_experts(cfg_p)
+    pad = Ea - cfg.moe_num_experts
+    p_pad = dict(p)
+    for k in ("w_up", "w_down", "w_gate"):
+        if k in p_pad:
+            p_pad[k] = jnp.pad(p_pad[k], ((0, pad), (0, 0), (0, 0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model)) * 0.5
+    y1, _ = apply_moe(p, cfg, x)
+    y2, _ = apply_moe(p_pad, cfg_p, x)
+    np.testing.assert_allclose(y1, y2, atol=1e-5)

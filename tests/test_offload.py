@@ -1,0 +1,120 @@
+"""Offload engine + simulator + partition optimizer integration tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import OffloadPolicy, make_policy
+from repro.data.synthetic import cifar_like
+from repro.models import convnet
+from repro.offload import latency as L
+from repro.offload.engine import convnet_engine
+from repro.offload.simulator import (
+    missed_deadline_curve,
+    missed_deadline_probability,
+    simulate_batches,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = cifar_like(n_train=64, n_val=512, n_test=1024, seed=3)
+    params = convnet.init_params(jax.random.PRNGKey(0))
+    return data, params
+
+
+def test_engine_routes_by_confidence(setup):
+    data, params = setup
+    policy = OffloadPolicy(p_tar=0.5, temperatures=[1.0])
+    engine = convnet_engine(params, policy, branch=1)
+    out = engine.infer({"images": jnp.asarray(data.test_x[:256])})
+    assert out["prediction"].shape == (256,)
+    assert engine.stats.requests == 256
+    assert engine.stats.on_device + engine.stats.offloaded == 256
+    # engine prediction must agree with running the branches manually
+    logits, hidden = convnet.edge_forward(params, jnp.asarray(data.test_x[:256]), 1)
+    conf = np.asarray(jax.nn.softmax(logits, -1).max(-1))
+    np.testing.assert_array_equal(np.asarray(out["on_device"]), conf >= 0.5)
+
+
+def test_engine_cloud_equals_full_model(setup):
+    """Offloaded samples must get EXACTLY the full model's prediction
+    (partitioned execution is numerically the unpartitioned model)."""
+    data, params = setup
+    x = jnp.asarray(data.test_x[:128])
+    policy = OffloadPolicy(p_tar=1.1, temperatures=[1.0])  # force offload all
+    engine = convnet_engine(params, policy, branch=1)
+    out = engine.infer({"images": x})
+    assert engine.stats.offloaded == 128
+    full = convnet.forward(params, x)
+    np.testing.assert_array_equal(
+        out["prediction"], np.asarray(jnp.argmax(full["logits"], -1))
+    )
+
+
+def test_engine_all_on_device(setup):
+    data, params = setup
+    policy = OffloadPolicy(p_tar=0.0, temperatures=[1.0])
+    engine = convnet_engine(params, policy, branch=1)
+    out = engine.infer({"images": jnp.asarray(data.test_x[:64])})
+    assert engine.stats.offloaded == 0
+    assert engine.stats.payload_bytes == 0
+
+
+def test_simulator_latency_accounting():
+    """Hand-built logits: half supremely confident, half uniform."""
+    n, c = 1024, 10
+    z_conf = np.zeros((n, c), np.float32)
+    z_conf[: n // 2, 0] = 100.0  # first half exits on device
+    final = np.zeros((n, c), np.float32)
+    final[:, 1] = 100.0
+    labels = np.concatenate(
+        [np.zeros(n // 2, np.int64), np.ones(n // 2, np.int64)]
+    )
+    prof = L.paper_2020()
+    outs = simulate_batches([z_conf], final, labels, 0.9, [1.0], prof, batch_size=256)
+    t_dev = L.edge_time(prof, 1)
+    t_cloud = t_dev + L.comm_time(prof, 1) + L.cloud_time(prof, 1)
+    for o in outs:
+        assert o.accuracy == 1.0  # device half correct cls 0, cloud half cls 1
+        assert t_dev <= o.time_s <= t_cloud
+    # batches are ordered: first two all-device, last two all-cloud
+    np.testing.assert_allclose(outs[0].time_s, t_dev, rtol=1e-6)
+    np.testing.assert_allclose(outs[-1].time_s, t_cloud, rtol=1e-6)
+
+
+def test_missed_deadline_monotone_in_t_tar():
+    n, c = 2048, 10
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=(n, c)).astype(np.float32) * 3
+    final = rng.normal(size=(n, c)).astype(np.float32) * 3
+    labels = rng.integers(0, c, n)
+    prof = L.paper_2020()
+    outs = simulate_batches([z], final, labels, 0.5, [1.0], prof)
+    ts = [1e-4, 1e-3, 1e-2, 1e-1]
+    curve = missed_deadline_curve(outs, ts, 0.0)  # p_tar=0: latency-only
+    assert all(a >= b for a, b in zip(curve, curve[1:]))  # non-increasing
+    assert curve[-1] == 0.0  # huge deadline always met (accuracy ignored)
+
+
+def test_partition_optimizer_prefers_cheap_exit():
+    from repro.core.partition import choose_partition
+
+    rng = np.random.default_rng(1)
+    # exit0 confident (cheap, rarely offloads); exit1 unconfident
+    z0 = np.zeros((512, 10), np.float32)
+    z0[:, 0] = 20.0
+    z1 = rng.normal(size=(512, 10)).astype(np.float32) * 0.01
+    cands = choose_partition(
+        [z0, z1],
+        temperatures=[1.0, 1.0],
+        p_tar=0.8,
+        edge_times_s=[1e-3, 2e-3],
+        cloud_times_s=[5e-3, 4e-3],
+        payload_bytes=[65536, 24576],
+        exit_layer_indices=[0, 1],
+        uplink_bps=18.8e6,
+    )
+    assert cands[0].exit_index == 0
+    assert cands[0].offload_prob < 0.01
+    assert cands[1].offload_prob > 0.9

@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates its REDUCED same-family variant
+(<=2 layers, d_model<=512, <=4 experts) and runs one forward/train step on
+CPU, asserting output shapes and absence of NaNs; decode-capable archs also
+run one serve step.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke, list_archs
+from repro.models import registry
+from repro.training import optim
+from repro.training.loop import make_train_step
+
+ARCHS = [a for a in list_archs() if a != "b_alexnet"]
+
+
+def _batch(cfg, key, b=2, s=32):
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.is_encoder_decoder:
+        batch["encoder_frames"] = jax.random.normal(
+            key, (b, cfg.encoder_seq, cfg.d_model)
+        ).astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_nans(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = registry.init_params(key, cfg)
+    b, s = 2, 32
+    out = registry.forward_train(params, cfg, _batch(cfg, key, b, s))
+    assert out["logits"].shape == (b, s, cfg.vocab_size)
+    assert len(out["exit_logits"]) == len(cfg.exit_layers)
+    for ex in out["exit_logits"]:
+        assert ex.shape == (b, s, cfg.vocab_size)
+    assert not bool(jnp.isnan(out["logits"].astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(1)
+    params = registry.init_params(key, cfg)
+    opt_cfg = optim.AdamWConfig(lr=1e-3, total_steps=10)
+    step = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
+    state = optim.init(params)
+    params2, state2, metrics = step(params, state, _batch(cfg, key))
+    assert not bool(jnp.isnan(metrics["loss"])), metrics
+    assert int(state2.step) == 1
+    # parameters actually moved
+    moved = jax.tree.map(
+        lambda a, b: bool(jnp.any(a.astype(jnp.float32) != b.astype(jnp.float32))),
+        params,
+        params2,
+    )
+    assert any(jax.tree.leaves(moved))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_decode_step(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(2)
+    params = registry.init_params(key, cfg)
+    b, L = 2, 64
+    caches = registry.init_cache(cfg, b, L)
+    if cfg.is_encoder_decoder:
+        from repro.models import whisper
+
+        frames = jax.random.normal(key, (b, cfg.encoder_seq, cfg.d_model)).astype(
+            jnp.bfloat16
+        )
+        caches = {
+            "self": caches["self"],
+            "cross": whisper.prefill_cross_caches(params, cfg, frames),
+        }
+    tok = jnp.ones((b, 1), jnp.int32)
+    out, caches2 = registry.decode_step(params, cfg, tok, caches, jnp.int32(3))
+    assert out["logits"].shape == (b, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(out["logits"].astype(jnp.float32)).any())
+
+
+def test_b_alexnet_smoke():
+    from repro.models import convnet
+
+    params = convnet.init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    out = convnet.forward(params, x)
+    assert out["logits"].shape == (4, 10)
+    assert len(out["exit_logits"]) == 2
+    for e in out["exit_logits"]:
+        assert e.shape == (4, 10)
+        assert not bool(jnp.isnan(e).any())

@@ -1,0 +1,140 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full loop on CPU: train the early-exit convnet on synthetic CIFAR ->
+side branch is overconfident -> Temperature Scaling fixes ECE -> the
+calibrated offloading policy meets p_tar while the conventional one misses
+it (the paper's central claim), exercised through the real OffloadEngine.
+
+Plus a subprocess integration test of the multi-pod dry-run machinery.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ece, fit_temperature, make_policy
+from repro.core.exits import gate_statistics
+from repro.core.metrics import device_statistics, inference_outage_probability
+from repro.data.synthetic import cifar_like
+from repro.models import convnet
+from repro.models.convnet import B_ALEXNET
+from repro.offload.engine import convnet_engine
+from repro.training import optim
+from repro.training.loop import make_train_step
+
+
+@pytest.fixture(scope="module")
+def trained():
+    data = cifar_like(n_train=6_000, n_val=1_500, n_test=3_072, seed=11)
+    params = convnet.init_params(jax.random.PRNGKey(0))
+    opt = optim.AdamWConfig(lr=2e-3, weight_decay=1e-4, total_steps=250, warmup_steps=30)
+    step = jax.jit(make_train_step(B_ALEXNET, opt, remat=False))
+    state = optim.init(params)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        order = rng.permutation(len(data.train_y))
+        for s in range(0, len(order) - 128 + 1, 128):
+            idx = order[s : s + 128]
+            b = {
+                "images": jnp.asarray(data.train_x[idx]),
+                "labels": jnp.asarray(data.train_y[idx]),
+            }
+            params, state, m = step(params, state, b)
+
+    @jax.jit
+    def infer(x):
+        return convnet.forward(params, x)
+
+    def logits(x):
+        outs = [infer(jnp.asarray(x[s : s + 512])) for s in range(0, len(x), 512)]
+        return (
+            np.concatenate([np.asarray(o["exit_logits"][0]) for o in outs]),
+            np.concatenate([np.asarray(o["logits"]) for o in outs]),
+        )
+
+    vb1, vmain = logits(data.val_x)
+    tb1, tmain = logits(data.test_x)
+    return data, params, vb1, tb1, tmain
+
+
+def test_training_learned_something(trained):
+    data, params, vb1, tb1, tmain = trained
+    _, pred, _ = gate_statistics(tmain, 1.0)
+    acc_main = float(np.mean(np.asarray(pred) == data.test_y))
+    _, pred1, _ = gate_statistics(tb1, 1.0)
+    acc_b1 = float(np.mean(np.asarray(pred1) == data.test_y))
+    assert acc_main > 0.5  # 10-class chance = 0.1
+    assert acc_b1 > 0.4
+    assert acc_main >= acc_b1 - 0.02  # deeper exit at least as good
+
+
+def test_branch_overconfident_and_calibration_fixes_it(trained):
+    data, params, vb1, tb1, tmain = trained
+    conf, pred, _ = gate_statistics(tb1, 1.0)
+    correct = np.asarray(pred) == data.test_y
+    e_before = ece(np.asarray(conf), correct)
+    overconf = float(np.asarray(conf).mean()) - float(correct.mean())
+    assert overconf > 0.02  # conventionally trained net is overconfident
+
+    T, _ = fit_temperature(jnp.asarray(vb1), jnp.asarray(data.val_y))
+    assert float(T) > 1.0
+    confT, _, _ = gate_statistics(tb1, float(T))
+    e_after = ece(np.asarray(confT), correct)
+    assert e_after < e_before
+
+
+def test_calibrated_policy_meets_target_better(trained):
+    """Paper Fig. 3(b)/4: device accuracy under calibration tracks p_tar."""
+    data, params, vb1, tb1, tmain = trained
+    T, _ = fit_temperature(jnp.asarray(vb1), jnp.asarray(data.val_y))
+    p_tar = 0.85
+    conv = device_statistics(tb1, data.test_y, p_tar, 1.0)
+    cal = device_statistics(tb1, data.test_y, p_tar, float(T))
+    # calibrated device accuracy must be closer to (or above) the target
+    short_conv = p_tar - float(conv["device_accuracy"])
+    short_cal = p_tar - float(cal["device_accuracy"])
+    assert short_cal < short_conv + 1e-6
+    o_conv = inference_outage_probability(tb1, data.test_y, p_tar, 1.0, batch_size=256)
+    o_cal = inference_outage_probability(
+        tb1, data.test_y, p_tar, float(T), batch_size=256
+    )
+    assert o_cal <= o_conv
+
+
+def test_engine_end_to_end_accuracy_gain(trained):
+    """Through the REAL partitioned engine: calibrated policy yields overall
+    accuracy >= conventional at equal p_tar (paper Fig. 3c)."""
+    data, params, vb1, tb1, tmain = trained
+    accs = {}
+    for calibrated in (False, True):
+        policy = make_policy(
+            [jnp.asarray(vb1)], jnp.asarray(data.val_y), p_tar=0.85,
+            calibrated=calibrated,
+        )
+        engine = convnet_engine(params, policy, branch=1)
+        correct = 0
+        for s in range(0, len(data.test_y), 512):
+            out = engine.infer({"images": jnp.asarray(data.test_x[s : s + 512])})
+            correct += int((out["prediction"] == data.test_y[s : s + 512]).sum())
+        accs[calibrated] = correct / len(data.test_y)
+    assert accs[True] >= accs[False] - 1e-9
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_pair():
+    """The multi-pod dry-run machinery lowers+compiles a real pair."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo_1b",
+         "--shape", "long_500k", "--outdir", "/tmp/dryrun_test"],
+        capture_output=True, text=True, timeout=560, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
