@@ -20,6 +20,8 @@ import os
 import numpy as np
 
 from benchmarks.paper_common import P_TAR_GRID, temperatures, train_and_collect
+from repro.core.calibration import TemperatureScaling
+from repro.core.policy import OffloadPlan
 from repro.core.metrics import (
     device_statistics,
     inference_outage_probability,
@@ -119,8 +121,13 @@ def _missed_deadline(z, temps, p_tar, branches):
         logits, z["test_main"], z["test_y"], p_tar, [1.0] * len(branches), prof,
         branches=branches,
     )
+    cal_plan = OffloadPlan(
+        p_tar=p_tar,
+        calibrators=[TemperatureScaling.from_temperature(t) for t in ts],
+    )
     cal = simulate_batches(
-        logits, z["test_main"], z["test_y"], p_tar, ts, prof, branches=branches
+        logits, z["test_main"], z["test_y"], profile=prof, branches=branches,
+        plan=cal_plan,
     )
     return (
         missed_deadline_curve(conv, T_TAR_GRID, p_tar),

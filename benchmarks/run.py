@@ -45,6 +45,22 @@ def bench_exit_gate_kernel(rows=256, vocab=50280):
     return us, f"hbm_bytes_fused={traffic};traffic_cut=3.0x"
 
 
+def bench_plan_gate(rows=512, c=10):
+    """OffloadPlan.gate fast path: temperature states hand raw logits + T
+    straight to apply_gate (kernel-routable) instead of materializing
+    calibrated logits."""
+    from repro.core.policy import OffloadPlan
+    from repro.core.calibration import TemperatureScaling
+
+    plan = OffloadPlan(
+        p_tar=0.85, calibrators=[TemperatureScaling.from_temperature(1.7)]
+    )
+    z = jax.random.normal(jax.random.PRNGKey(0), (rows, c)) * 4
+    f = jax.jit(lambda zz: plan.gate(zz).exit_mask)
+    us = _time_call(f, z)
+    return us, f"rows={rows};fastpath=temperature"
+
+
 def bench_calibration_fit(n=10000, c=10):
     from repro.core.calibration import fit_temperature
 
@@ -103,6 +119,7 @@ def main() -> None:
     rows = [
         ("exit_gate_jnp", *bench_exit_gate_jnp()),
         ("exit_gate_kernel_interpret", *bench_exit_gate_kernel()),
+        ("plan_gate_fastpath", *bench_plan_gate()),
         ("calibration_fit_temperature", *bench_calibration_fit()),
         ("b_alexnet_train_step", *bench_b_alexnet_step()),
         ("smoke_decode_step", *bench_smoke_decode()),

@@ -3,7 +3,8 @@
 
 Builds the two jitted partitions of B-AlexNet (edge = conv1 + branch1,
 cloud = the rest), wraps them in the OffloadEngine with a conventional and
-a calibrated policy, serves the test set in request batches, and reports
+a calibrated OffloadPlan (deployed via its JSON serialization, as an edge
+device would receive it), serves the test set in request batches, and reports
 offload rate / accuracy / estimated latency / missed-deadline probability
 under the paper's latency constants (i7 edge, K80 cloud, 18.8 Mbps uplink).
 
@@ -18,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make_policy
+from repro.core import OffloadPlan, make_plan
 from repro.data.synthetic import cifar_like
 from repro.models import convnet
 from repro.models.convnet import B_ALEXNET
@@ -70,9 +71,11 @@ def main():
           f"cloud={L.cloud_time(profile,1)*1e3:.3f} ms per sample")
 
     for calibrated in (False, True):
-        policy = make_policy([jnp.asarray(vlog)], jnp.asarray(data.val_y),
-                             p_tar=p_tar, calibrated=calibrated)
-        engine = convnet_engine(params, policy, branch=1)
+        plan = make_plan([jnp.asarray(vlog)], jnp.asarray(data.val_y),
+                         p_tar=p_tar, calibrated=calibrated)
+        # deploy the serialized artifact, exactly as an edge device would
+        plan = OffloadPlan.from_json(plan.to_json())
+        engine = convnet_engine(params, plan, branch=1)
         correct = 0
         times = []
         for s in range(0, len(data.test_y), 512):
@@ -89,7 +92,7 @@ def main():
         acc = correct / len(data.test_y)
         name = "calibrated " if calibrated else "conventional"
         print(
-            f"{name}: T={policy.temperatures[0]:.2f} "
+            f"{name}: T={plan.temperatures[0]:.2f} "
             f"offload_rate={engine.stats.offload_rate:.2f} "
             f"accuracy={acc:.3f} mean_batch_latency={np.mean(times)*1e3:.3f} ms "
             f"payload={engine.stats.payload_bytes/1e6:.1f} MB total"

@@ -3,8 +3,11 @@
 1. Train a small early-exit B-AlexNet on the synthetic CIFAR-10 stand-in
    (reduced data for speed -- benchmarks/ uses the full 45k/3k/7k split).
 2. Show the side branch is overconfident (ECE, reliability diagram).
-3. Fit Temperature Scaling on the validation split (paper Eq. 2).
-4. Build the conventional vs calibrated OffloadPolicy and compare:
+3. Fit Temperature Scaling on the validation split (paper Eq. 2) and bundle
+   it into an OffloadPlan -- then serialize the plan to JSON and reload it,
+   verifying the reloaded plan gates bit-identically (the deployable
+   artifact IS the calibration pass).
+4. Compare the conventional (identity) vs calibrated plan:
    on-device rate, device accuracy vs p_tar, inference outage.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -19,10 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    OffloadPlan,
     ece,
     fit_temperature,
     inference_outage_probability,
-    make_policy,
+    make_plan,
 )
 from repro.core.exits import gate_statistics
 from repro.core.metrics import device_statistics
@@ -71,21 +75,34 @@ def main():
     print(f"  branch-1 mean confidence: {np.asarray(conf).mean():.3f}")
     print(f"  branch-1 ECE:             {ece(np.asarray(conf), correct):.3f}")
 
-    print("\n== 3. temperature scaling (fit on validation) ==")
+    print("\n== 3. temperature scaling -> OffloadPlan -> JSON round-trip ==")
     T, info = fit_temperature(jnp.asarray(vb1), jnp.asarray(data.val_y))
     print(f"  T = {float(T):.3f}  (NLL {float(info['nll_before']):.3f} -> "
           f"{float(info['nll_after']):.3f})")
     confT, _, _ = gate_statistics(tb1, float(T))
     print(f"  calibrated ECE:           {ece(np.asarray(confT), correct):.3f}")
 
-    print("\n== 4. offloading policies (paper Figs. 2/3b/4) ==")
+    plan = make_plan([jnp.asarray(vb1)], jnp.asarray(data.val_y), p_tar=0.85)
+    blob = plan.to_json()
+    reloaded = OffloadPlan.from_json(blob)
+    g0 = plan.gate(jnp.asarray(tb1))
+    g1 = reloaded.gate(jnp.asarray(tb1))
+    same = bool(np.array_equal(np.asarray(g0.exit_mask), np.asarray(g1.exit_mask)))
+    print(f"  plan JSON = {len(blob)} bytes; reloaded gate decisions "
+          f"bit-identical: {same}")
+
+    print("\n== 4. offloading plans (paper Figs. 2/3b/4) ==")
+    conv = make_plan([jnp.asarray(vb1)], jnp.asarray(data.val_y),
+                     p_tar=0.85, calibrated=False)
     print("  p_tar | on-device%  conv/cal | device-acc conv/cal | outage conv/cal")
     for p_tar in (0.75, 0.85, 0.9):
-        sc = device_statistics(tb1, data.test_y, p_tar, 1.0)
-        sk = device_statistics(tb1, data.test_y, p_tar, float(T))
-        oc = inference_outage_probability(tb1, data.test_y, p_tar, 1.0, batch_size=256)
+        sc = device_statistics(tb1, data.test_y, p_tar, conv.temperatures[0])
+        sk = device_statistics(tb1, data.test_y, p_tar, plan.temperatures[0])
+        oc = inference_outage_probability(
+            tb1, data.test_y, p_tar, conv.temperatures[0], batch_size=256
+        )
         ok = inference_outage_probability(
-            tb1, data.test_y, p_tar, float(T), batch_size=256
+            tb1, data.test_y, p_tar, plan.temperatures[0], batch_size=256
         )
         print(
             f"  {p_tar:.3f} |   {float(sc['on_device_prob']):.2f} / "

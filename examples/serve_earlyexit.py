@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
-from repro.core import make_policy
+from repro.core import make_plan
 from repro.data.pipeline import TokenIterator
 from repro.data.synthetic import lm_sequences
 from repro.models import registry, transformer
@@ -55,8 +55,8 @@ def main():
     vlabels = jnp.asarray(vb["labels"][:, -1])
     for calibrated in (False, True):
         # p_tar chosen inside the partially-trained model's confidence range
-        policy = make_policy([vlogits], vlabels, p_tar=0.3, calibrated=calibrated)
-        engine = lm_engine(params, cfg, policy)
+        plan = make_plan([vlogits], vlabels, p_tar=0.3, calibrated=calibrated)
+        engine = lm_engine(params, cfg, plan)
         hits = 0
         total = 0
         for _ in range(8):
@@ -66,7 +66,7 @@ def main():
             total += len(res["prediction"])
         tag = "calibrated " if calibrated else "conventional"
         print(
-            f"{tag}: T={policy.temperatures[0]:.2f} "
+            f"{tag}: T={plan.temperatures[0]:.2f} "
             f"on-device={1-engine.stats.offload_rate:.2f} "
             f"next-token acc={hits/total:.3f} "
             f"payload shipped={engine.stats.payload_bytes/1e6:.2f} MB"

@@ -1,12 +1,35 @@
 """The paper's contribution as a composable library.
 
+The pipeline is: run a validation pass over the early-exit network, fit a
+`Calibrator` per exit, bundle the resulting `CalibratorState`s with the
+gating criterion, `p_tar`, and the chosen partition point into an
+`OffloadPlan`, serialize it to JSON, and hand it to the serving stack.
+A reloaded plan gates bit-identically -- the artifact fit in the lab is
+the artifact deployed on the device.
+
   exits        confidence gating (max-softmax / entropy) + cascades
-  calibration  Temperature Scaling (+ vector scaling, sequential cascades)
+  calibration  the Calibrator protocol + registry: Temperature Scaling
+               (paper Eq. 2), vector scaling, identity baseline; states
+               are JAX pytrees so gating stays jit/vmap-compatible
+  policy       OffloadPlan -- the single deployable artifact (per-exit
+               calibrator states + gate + partition), JSON round-trip
+  partition    adaptive partition-point selection (expected-latency
+               optimal); select_partition writes the choice into the plan
   metrics      ECE, reliability diagrams, inference outage, missed deadline
-  policy       deployable OffloadPolicy built from a calibration pass
-  partition    adaptive partition-point selection (expected-latency optimal)
+
+Consumers: repro.offload.engine (serving), repro.offload.simulator
+(missed-deadline experiments), benchmarks/ and examples/.
 """
-from repro.core.calibration import fit_temperature, calibrate_cascade  # noqa: F401
+from repro.core.calibration import (  # noqa: F401
+    Calibrator,
+    CalibratorState,
+    apply_calibrator,
+    available_calibrators,
+    calibrate_cascade,
+    fit_temperature,
+    get_calibrator,
+    register_calibrator,
+)
 from repro.core.exits import apply_gate, cascade_gate, gate_statistics  # noqa: F401
 from repro.core.metrics import (  # noqa: F401
     ece,
@@ -15,4 +38,10 @@ from repro.core.metrics import (  # noqa: F401
     overall_accuracy,
     reliability_diagram,
 )
-from repro.core.policy import OffloadPolicy, make_policy  # noqa: F401
+from repro.core.partition import choose_partition, select_partition  # noqa: F401
+from repro.core.policy import (  # noqa: F401
+    OffloadPlan,
+    OffloadPolicy,
+    make_plan,
+    make_policy,
+)

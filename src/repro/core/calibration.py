@@ -1,28 +1,54 @@
 """Post-hoc calibration (paper Sec. IV-A, following Guo et al. 2017).
 
-Temperature Scaling: a single scalar T per exit, fit on validation logits by
-minimizing NLL with frozen weights (Eq. 2). The optimum is found by Newton's
-method on dNLL/d(log T) with a golden-section fallback -- both pure JAX, both
-deterministic.
+Two layers of API:
 
-Beyond-paper extensions included because they slot into the same interface:
-  * vector scaling (per-class affine on logits),
-  * per-exit temperature for cascades (fit each branch on the samples that
-    *reach* it, matching deployment distribution -- Guo et al. fit on all).
+1. Fit primitives (`fit_temperature`, `fit_vector_scaling`,
+   `calibrate_cascade`) -- pure JAX optimizers over validation logits.
+
+2. The `Calibrator` protocol -- the deployable abstraction the rest of the
+   system consumes. A calibrator turns a validation pass into a
+   `CalibratorState` (a JAX pytree, so gating stays jit/vmap-compatible and
+   the state can ride inside compiled serving steps) and maps raw logits to
+   calibrated logits at inference time:
+
+       state  = get_calibrator("temperature").fit(logits, labels)
+       logits = apply_calibrator(state, logits)
+
+   Implementations are looked up by name in a registry
+   (`register_calibrator` / `get_calibrator`): ``temperature`` (the paper's
+   method, Eq. 2), ``vector`` (per-class affine, beyond-paper), and
+   ``identity`` (the conventional-DNN baseline, T=1). States serialize to
+   plain dicts (`CalibratorState.to_dict`/`from_dict`) so an `OffloadPlan`
+   can ship them as JSON.
+
+Temperature Scaling fits a single scalar T per exit on validation logits by
+minimizing NLL with frozen weights. The optimum is found by Newton's method
+on dNLL/d(log T) with a golden-section fallback -- both pure JAX, both
+deterministic. Per-exit cascade fits can weight samples by reachability
+(`sequential=True`), matching the deployment-time conditional distribution.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-def nll(logits, labels, temperature):
-    """Mean negative log-likelihood of softmax(logits/T)."""
+def nll(logits, labels, temperature, weights=None):
+    """Mean negative log-likelihood of softmax(logits/T).
+
+    weights: optional per-sample non-negative weights; None = uniform.
+    """
     z = logits.astype(jnp.float32) / temperature
     logp = jax.nn.log_softmax(z, axis=-1)
-    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    per_sample = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if weights is None:
+        return jnp.mean(per_sample)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(per_sample * w) / jnp.maximum(jnp.sum(w), 1e-9)
 
 
 def fit_temperature(
@@ -31,15 +57,19 @@ def fit_temperature(
     t_min: float = 0.05,
     t_max: float = 20.0,
     newton_steps: int = 30,
+    weights=None,
 ) -> Tuple[float, dict]:
     """Fit T by NLL minimization over log-T (convex in practice).
 
-    Returns (T, info). Pure JAX; jit-friendly.
+    weights: optional per-sample weights (used by sequential cascade
+    calibration to restrict the fit to samples that reach the exit without
+    gathering/padding the index set). Returns (T, info). Pure JAX;
+    jit-friendly.
     """
     logits = logits.astype(jnp.float32)
 
     def loss_logt(logt):
-        return nll(logits, labels, jnp.exp(logt))
+        return nll(logits, labels, jnp.exp(logt), weights=weights)
 
     g = jax.grad(loss_logt)
     h = jax.grad(g)
@@ -76,8 +106,8 @@ def fit_temperature(
     T_g = jnp.exp(logt_g)
     T_final = jnp.where(loss_logt(jnp.log(T)) <= loss_logt(logt_g), T, T_g)
     info = {
-        "nll_before": nll(logits, labels, 1.0),
-        "nll_after": nll(logits, labels, T_final),
+        "nll_before": nll(logits, labels, 1.0, weights=weights),
+        "nll_after": nll(logits, labels, T_final, weights=weights),
         "converged_step": jnp.min(steps),
     }
     return T_final, info
@@ -116,15 +146,15 @@ def calibrate_cascade(exit_logits_list, labels, sequential: bool = False, p_tar:
     sequential=False (paper / Guo): each exit fit on ALL validation samples.
     sequential=True (beyond-paper): exit i is fit only on the samples that
     reach it under the already-calibrated earlier exits -- matching the
-    deployment-time conditional distribution of the cascade.
+    deployment-time conditional distribution of the cascade. Reachability
+    enters the fit as per-sample NLL weights (a padded gather would
+    duplicate sample 0 into the index set and bias the fit).
     """
     temps = []
     reach = jnp.ones(labels.shape[0], bool)
     for logits in exit_logits_list:
-        if sequential:
-            # fit on reached samples (mask via weighting: drop others)
-            idx = jnp.nonzero(reach, size=labels.shape[0], fill_value=0)[0]
-            T, _ = fit_temperature(logits[idx], labels[idx])
+        if sequential and not bool(jnp.all(reach)):
+            T, _ = fit_temperature(logits, labels, weights=reach.astype(jnp.float32))
         else:
             T, _ = fit_temperature(logits, labels)
         temps.append(float(T))
@@ -134,3 +164,152 @@ def calibrate_cascade(exit_logits_list, labels, sequential: bool = False, p_tar:
             conf, _, _ = gate_statistics(logits, T)
             reach = reach & (conf < p_tar)
     return temps
+
+
+# --------------------------------------------------------------------------
+# Calibrator protocol: fit -> CalibratorState (pytree) -> apply
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class CalibratorState:
+    """The deployable output of a calibration pass for ONE exit.
+
+    `kind` names the calibrator in the registry (static / aux data);
+    `params` holds its arrays (pytree leaves), so a state can cross jit
+    boundaries, be vmapped over, and ride inside compiled serving steps.
+    """
+
+    kind: str
+    params: Dict[str, jnp.ndarray]
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.params))
+        return tuple(self.params[k] for k in keys), (self.kind, keys)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, keys = aux
+        return cls(kind=kind, params=dict(zip(keys, children)))
+
+    # -- serialization (JSON-safe plain dicts; float32 round-trips exactly
+    #    through Python floats, so reloaded states gate bit-identically)
+    def to_dict(self) -> dict:
+        return {
+            "kind": self.kind,
+            "params": {
+                k: np.asarray(v, np.float32).tolist() for k, v in self.params.items()
+            },
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CalibratorState":
+        return cls(
+            kind=d["kind"],
+            params={k: jnp.asarray(v, jnp.float32) for k, v in d["params"].items()},
+        )
+
+    @property
+    def temperature(self) -> Optional[float]:
+        """Effective scalar temperature, or None if not expressible as one.
+
+        'temperature' states report their fitted T, 'identity' reports 1.0;
+        richer calibrators (vector scaling) return None -- consumers must
+        go through apply_calibrator for those.
+        """
+        if self.kind == "temperature":
+            return float(self.params["temperature"])
+        if self.kind == "identity":
+            return 1.0
+        return None
+
+
+@runtime_checkable
+class Calibrator(Protocol):
+    """A named calibration method: fit on validation logits, apply at serve.
+
+    apply() must be pure JAX on the logits so gating stays jit/vmap-safe.
+    """
+
+    name: str
+
+    def fit(self, logits, labels, **kwargs) -> CalibratorState: ...
+
+    def apply(self, state: CalibratorState, logits) -> jnp.ndarray: ...
+
+
+_CALIBRATORS: Dict[str, Calibrator] = {}
+
+
+def register_calibrator(calibrator: Calibrator) -> Calibrator:
+    """Register (an instance of) a Calibrator under its `name`."""
+    _CALIBRATORS[calibrator.name] = calibrator
+    return calibrator
+
+
+def get_calibrator(name: str) -> Calibrator:
+    try:
+        return _CALIBRATORS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown calibrator {name!r}; registered: {sorted(_CALIBRATORS)}"
+        ) from None
+
+
+def available_calibrators():
+    return sorted(_CALIBRATORS)
+
+
+def apply_calibrator(state: CalibratorState, logits) -> jnp.ndarray:
+    """Dispatch `apply` through the registry on the state's kind."""
+    return get_calibrator(state.kind).apply(state, logits)
+
+
+class TemperatureScaling:
+    """The paper's method (Guo et al. Eq. 2): z -> z / T."""
+
+    name = "temperature"
+
+    def fit(self, logits, labels, weights=None, **kwargs) -> CalibratorState:
+        T, _ = fit_temperature(logits, labels, weights=weights, **kwargs)
+        return CalibratorState(
+            self.name, {"temperature": jnp.asarray(T, jnp.float32)}
+        )
+
+    def apply(self, state, logits):
+        return logits.astype(jnp.float32) / state.params["temperature"]
+
+    @staticmethod
+    def from_temperature(t: float) -> CalibratorState:
+        return CalibratorState(
+            "temperature", {"temperature": jnp.asarray(t, jnp.float32)}
+        )
+
+
+class VectorScaling:
+    """Beyond-paper per-class affine: z -> w * z + b."""
+
+    name = "vector"
+
+    def fit(self, logits, labels, **kwargs) -> CalibratorState:
+        w, b, _ = fit_vector_scaling(logits, labels, **kwargs)
+        return CalibratorState(self.name, {"w": w, "b": b})
+
+    def apply(self, state, logits):
+        return logits.astype(jnp.float32) * state.params["w"] + state.params["b"]
+
+
+class Identity:
+    """The conventional-DNN baseline: no calibration (T=1 everywhere)."""
+
+    name = "identity"
+
+    def fit(self, logits, labels, **kwargs) -> CalibratorState:
+        return CalibratorState(self.name, {})
+
+    def apply(self, state, logits):
+        return logits
+
+
+register_calibrator(TemperatureScaling())
+register_calibrator(VectorScaling())
+register_calibrator(Identity())

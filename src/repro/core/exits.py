@@ -72,11 +72,16 @@ def apply_gate(
     return GateResult(conf, pred, ent, mask)
 
 
-def cascade_gate(exit_logits_list, final_logits, p_tar, temperatures=None):
+def cascade_gate(exit_logits_list, final_logits, p_tar=None, temperatures=None,
+                 plan=None):
     """Multi-branch cascade (paper Sec. IV-F).
 
     Walks the exits in order; each sample is classified by the FIRST exit
     whose confidence clears p_tar, else by the final (cloud) head.
+
+    Calibration comes either from `plan` (an OffloadPlan: per-exit
+    CalibratorState + p_tar) or from the legacy `temperatures` list with an
+    explicit `p_tar`; an explicit p_tar overrides the plan's.
 
     Returns dict with:
       exit_index: (batch,) int32, index of serving exit (len(exits) = cloud)
@@ -84,6 +89,15 @@ def cascade_gate(exit_logits_list, final_logits, p_tar, temperatures=None):
       confidence: (batch,) float32 (of the serving head)
     """
     n_exits = len(exit_logits_list)
+    if plan is not None:
+        if p_tar is None:
+            p_tar = plan.p_tar
+        exit_logits_list = [
+            plan.calibrated_logits(z, i) for i, z in enumerate(exit_logits_list)
+        ]
+        temperatures = [1.0] * n_exits
+    elif p_tar is None:
+        raise ValueError("cascade_gate needs p_tar or plan")
     if temperatures is None:
         temperatures = [1.0] * n_exits
     batch = final_logits.shape[0]

@@ -43,18 +43,32 @@ def expected_latency(
 
 def choose_partition(
     exit_logits_list: Sequence[np.ndarray],
-    temperatures: Sequence[float],
-    p_tar: float,
-    edge_times_s: Sequence[float],
-    cloud_times_s: Sequence[float],
-    payload_bytes: Sequence[int],
-    exit_layer_indices: Sequence[int],
-    uplink_bps: float,
+    temperatures: Sequence[float] = None,
+    p_tar: float = None,
+    edge_times_s: Sequence[float] = (),
+    cloud_times_s: Sequence[float] = (),
+    payload_bytes: Sequence[int] = (),
+    exit_layer_indices: Sequence[int] = (),
+    uplink_bps: float = 18.8e6,
+    plan=None,
 ) -> List[PartitionCandidate]:
-    """Rank candidate partitions by expected latency. First entry wins."""
+    """Rank candidate partitions by expected latency. First entry wins.
+
+    Calibration comes either from `plan` (an OffloadPlan: the offload
+    probability at each exit uses that exit's CalibratorState and the plan's
+    p_tar) or from the legacy `temperatures` list with an explicit `p_tar`.
+    """
+    if plan is not None:
+        if p_tar is None:
+            p_tar = plan.p_tar
+    elif temperatures is None or p_tar is None:
+        raise ValueError("choose_partition needs (temperatures, p_tar) or plan")
     cands = []
     for i, logits in enumerate(exit_logits_list):
-        conf, _, _ = gate_statistics(logits, temperatures[i])
+        if plan is not None:
+            conf, _, _ = gate_statistics(plan.calibrated_logits(logits, i))
+        else:
+            conf, _, _ = gate_statistics(logits, temperatures[i])
         offload_prob = float(np.mean(np.asarray(conf) < p_tar))
         lat = expected_latency(
             edge_times_s[i], cloud_times_s[i], payload_bytes[i], offload_prob, uplink_bps
@@ -71,3 +85,31 @@ def choose_partition(
             )
         )
     return sorted(cands, key=lambda c: c.expected_latency_s)
+
+
+def select_partition(
+    plan,
+    exit_logits_list: Sequence[np.ndarray],
+    edge_times_s: Sequence[float],
+    cloud_times_s: Sequence[float],
+    payload_bytes: Sequence[int],
+    exit_layer_indices: Sequence[int],
+    uplink_bps: float,
+):
+    """Choose the latency-optimal partition and record it in the plan.
+
+    Returns (plan', candidates): plan' is a copy of `plan` with exit_index
+    and partition_layer set from the winning candidate -- the complete
+    deployable artifact (calibration + gate + split point).
+    """
+    cands = choose_partition(
+        exit_logits_list,
+        edge_times_s=edge_times_s,
+        cloud_times_s=cloud_times_s,
+        payload_bytes=payload_bytes,
+        exit_layer_indices=exit_layer_indices,
+        uplink_bps=uplink_bps,
+        plan=plan,
+    )
+    best = cands[0]
+    return plan.with_partition(best.exit_index, best.partition_layer), cands

@@ -1,39 +1,228 @@
-"""Offloading policy: the deployable decision object.
+"""OffloadPlan: the single deployable artifact of a calibration pass.
 
-Bundles everything the edge runtime needs to make the paper's decision:
-which exit(s) to consult, the calibrated temperature(s), the confidence
-criterion, and the target p_tar. Produced by `make_policy` from a
-calibration pass; consumed by repro.offload.engine and the simulator.
+The paper's pipeline produces three coupled decisions -- per-exit
+calibration, the confidence gate, and the partition point. `OffloadPlan`
+bundles all of them:
+
+  * one `CalibratorState` per early exit (any registered `Calibrator`);
+  * the gating criterion (max-softmax confidence or entropy) and `p_tar`;
+  * the deployed exit / partition layer chosen by the partition optimizer.
+
+A plan serializes to JSON (`to_json`/`from_json`, `save`/`load`); a
+reloaded plan gates bit-identically, so the artifact fit in the lab is the
+artifact deployed on the device. Consumed by `repro.offload.engine`,
+`repro.offload.simulator`, `repro.core.partition`, and
+`repro.core.exits.cascade_gate`.
+
+`OffloadPolicy` / `make_policy` remain as thin deprecation shims over the
+temperature-list API.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.calibration import calibrate_cascade
+from repro.core.calibration import (
+    CalibratorState,
+    TemperatureScaling,
+    apply_calibrator,
+    calibrate_cascade,
+    get_calibrator,
+)
 from repro.core.exits import apply_gate
+
+PLAN_FORMAT_VERSION = 1
 
 
 @dataclass
-class OffloadPolicy:
+class OffloadPlan:
     p_tar: float
-    temperatures: List[float]  # one per exit; 1.0 = uncalibrated
+    calibrators: List[CalibratorState]  # one per exit, shallowest first
     criterion: str = "confidence"  # confidence | entropy
     entropy_threshold: Optional[float] = None
-    exit_index: int = 0  # which exit the single-branch paths use
-    calibrated: bool = True
+    exit_index: int = 0  # deployed exit: which calibrator single-branch paths use
+    partition_layer: Optional[int] = None  # model layer of the split, if chosen
+    metadata: Dict[str, Any] = field(default_factory=dict)
 
-    def gate(self, exit_logits, branch: int = 0, use_kernel: bool = False):
+    @property
+    def num_exits(self) -> int:
+        return len(self.calibrators)
+
+    @property
+    def temperatures(self) -> List[float]:
+        """Legacy temperature-list view (1.0 for states with no scalar T)."""
+        return [s.temperature if s.temperature is not None else 1.0
+                for s in self.calibrators]
+
+    # ------------------------------------------------------------- gating
+    def _state_for(self, branch: Optional[int]) -> CalibratorState:
+        branch = self.exit_index if branch is None else branch
+        if not 0 <= branch < self.num_exits:
+            raise ValueError(
+                f"exit {branch} has no calibrator state "
+                f"(plan covers {self.num_exits} exit(s))"
+            )
+        return self.calibrators[branch]
+
+    def calibrated_logits(self, exit_logits, branch: Optional[int] = None):
+        return apply_calibrator(self._state_for(branch), exit_logits)
+
+    def gate(self, exit_logits, branch: Optional[int] = None, use_kernel: bool = False):
+        """Gate one exit's logits under this plan's calibrator + criterion.
+
+        Fast path: when the branch's calibration is expressible as a scalar
+        temperature (temperature scaling or identity), the raw logits and T
+        go straight to apply_gate, which can route through the fused Pallas
+        exit-gate kernel (use_kernel=True) without materializing calibrated
+        logits. Richer calibrators apply first and gate at T=1. The kind
+        dispatch is static (pytree aux data), so this traces under jit/vmap
+        even when the CalibratorState arrives as a traced argument.
+        """
+        state = self._state_for(branch)
+        if state.kind in ("temperature", "identity"):
+            t = state.params["temperature"] if state.kind == "temperature" else 1.0
+            return apply_gate(
+                exit_logits,
+                self.p_tar,
+                temperature=t,
+                criterion=self.criterion,
+                entropy_threshold=self.entropy_threshold,
+                use_kernel=use_kernel,
+            )
         return apply_gate(
-            exit_logits,
+            apply_calibrator(state, exit_logits),
             self.p_tar,
-            temperature=self.temperatures[branch],
+            temperature=1.0,
             criterion=self.criterion,
             entropy_threshold=self.entropy_threshold,
             use_kernel=use_kernel,
         )
+
+    def with_partition(self, exit_index: int, partition_layer: int) -> "OffloadPlan":
+        """New plan with the chosen partition point recorded."""
+        return OffloadPlan(
+            p_tar=self.p_tar,
+            calibrators=list(self.calibrators),
+            criterion=self.criterion,
+            entropy_threshold=self.entropy_threshold,
+            exit_index=exit_index,
+            partition_layer=partition_layer,
+            metadata=dict(self.metadata),
+        )
+
+    # ------------------------------------------------------ serialization
+    def to_dict(self) -> dict:
+        return {
+            "version": PLAN_FORMAT_VERSION,
+            "p_tar": float(self.p_tar),
+            "calibrators": [s.to_dict() for s in self.calibrators],
+            "criterion": self.criterion,
+            "entropy_threshold": (
+                None if self.entropy_threshold is None else float(self.entropy_threshold)
+            ),
+            "exit_index": int(self.exit_index),
+            "partition_layer": (
+                None if self.partition_layer is None else int(self.partition_layer)
+            ),
+            "metadata": self.metadata,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "OffloadPlan":
+        version = d.get("version", PLAN_FORMAT_VERSION)
+        if version > PLAN_FORMAT_VERSION:
+            raise ValueError(f"plan format v{version} is newer than supported "
+                             f"v{PLAN_FORMAT_VERSION}")
+        return cls(
+            p_tar=d["p_tar"],
+            calibrators=[CalibratorState.from_dict(s) for s in d["calibrators"]],
+            criterion=d.get("criterion", "confidence"),
+            entropy_threshold=d.get("entropy_threshold"),
+            exit_index=d.get("exit_index", 0),
+            partition_layer=d.get("partition_layer"),
+            metadata=d.get("metadata", {}),
+        )
+
+    def to_json(self, **kwargs) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, **kwargs)
+
+    @classmethod
+    def from_json(cls, s: str) -> "OffloadPlan":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=2))
+
+    @classmethod
+    def load(cls, path: str) -> "OffloadPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def make_plan(
+    exit_logits_list,
+    labels,
+    p_tar: float,
+    method: str = "temperature",
+    calibrated: bool = True,
+    sequential: bool = False,
+    criterion: str = "confidence",
+    entropy_threshold: Optional[float] = None,
+    exit_index: int = 0,
+    metadata: Optional[Dict[str, Any]] = None,
+) -> OffloadPlan:
+    """Build a deployable plan from a validation pass.
+
+    calibrated=False reproduces the paper's 'conventional DNN' baseline
+    (identity calibration, T=1 everywhere); otherwise `method` picks the
+    registered calibrator fit per exit. sequential=True (temperature only)
+    fits exit i on the samples that reach it in the cascade.
+    """
+    if not calibrated:
+        method = "identity"
+    cal = get_calibrator(method)
+    if method == "temperature":
+        temps = calibrate_cascade(
+            exit_logits_list, labels, sequential=sequential, p_tar=p_tar
+        )
+        states = [TemperatureScaling.from_temperature(t) for t in temps]
+    else:
+        states = [cal.fit(z, labels) for z in exit_logits_list]
+    return OffloadPlan(
+        p_tar=p_tar,
+        calibrators=states,
+        criterion=criterion,
+        entropy_threshold=entropy_threshold,
+        exit_index=exit_index,
+        metadata=metadata or {},
+    )
+
+
+# ------------------------------------------------------- deprecation shims
+class OffloadPolicy(OffloadPlan):
+    """Deprecated temperature-list constructor; use OffloadPlan/make_plan."""
+
+    def __init__(
+        self,
+        p_tar: float,
+        temperatures: Sequence[float],
+        criterion: str = "confidence",
+        entropy_threshold: Optional[float] = None,
+        exit_index: int = 0,
+        calibrated: bool = True,
+    ):
+        OffloadPlan.__init__(
+            self,
+            p_tar=p_tar,
+            calibrators=[TemperatureScaling.from_temperature(t) for t in temperatures],
+            criterion=criterion,
+            entropy_threshold=entropy_threshold,
+            exit_index=exit_index,
+            metadata={"calibrated": calibrated},
+        )
+        self.calibrated = calibrated
 
 
 def make_policy(
@@ -42,17 +231,12 @@ def make_policy(
     p_tar: float,
     calibrated: bool = True,
     sequential: bool = False,
-) -> OffloadPolicy:
-    """Build a policy from validation logits.
-
-    calibrated=False reproduces the paper's 'conventional DNN' baseline
-    (T=1 everywhere); calibrated=True runs Temperature Scaling per exit.
-    """
-    n = len(exit_logits_list)
-    if calibrated:
-        temps = calibrate_cascade(
-            exit_logits_list, labels, sequential=sequential, p_tar=p_tar
-        )
-    else:
-        temps = [1.0] * n
-    return OffloadPolicy(p_tar=p_tar, temperatures=temps, calibrated=calibrated)
+) -> OffloadPlan:
+    """Deprecated: thin wrapper over make_plan (kept for the seed API)."""
+    return make_plan(
+        exit_logits_list,
+        labels,
+        p_tar=p_tar,
+        calibrated=calibrated,
+        sequential=sequential,
+    )

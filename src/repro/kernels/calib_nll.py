@@ -27,6 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams in newer jax
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG = -1e30
 
 
@@ -102,7 +105,7 @@ def calib_nll_kernel(logits, labels, temperature,
         out_specs=(row_spec, row_spec, row_spec, row_spec),
         out_shape=out_shapes,
         scratch_shapes=[pltpu.VMEM((block_rows,), jnp.float32) for _ in range(5)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -33,6 +33,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams in newer jax
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG = -1e30
 
 
@@ -117,7 +120,7 @@ def exit_gate_kernel(
             pltpu.VMEM((block_rows,), jnp.float32),  # best value
             pltpu.VMEM((block_rows,), jnp.int32),  # best index
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -5,24 +5,26 @@ A small serving runtime around the two jitted partitions of a model:
     edge partition  = blocks [0..exit_k] + exit head   (the device)
     cloud partition = blocks [exit_k..L] + main head   (the pod)
 
-Per request batch: the edge partition runs first; the calibrated gate
-(OffloadPolicy) marks which samples exit on-device; only the refused
-samples' partition activations are shipped to the cloud partition (the
-payload the paper prices at 18.8 Mbps). The engine keeps running
-statistics (offload rate, per-tier latency estimates) and works for the
-convnet (per-image classification, the paper's case) and for the LM
-families (per-sequence classification at prefill).
+Per request batch: the edge partition runs first; the calibrated gate of
+the deployed OffloadPlan marks which samples exit on-device; only the
+refused samples' partition activations are shipped to the cloud partition
+(the payload the paper prices at 18.8 Mbps). The engine gates with the
+CalibratorState of the branch that is PHYSICALLY deployed on the edge --
+not the plan's default exit -- so a plan calibrated for several exits
+always pairs branch-k logits with branch-k calibration. The engine keeps
+running statistics (offload rate, per-tier latency estimates) and works
+for the convnet (per-image classification, the paper's case) and for the
+LM families (per-sequence classification at prefill).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import OffloadPolicy
+from repro.core.policy import OffloadPlan
 
 
 @dataclass
@@ -42,27 +44,46 @@ class OffloadEngine:
 
     edge_fn(batch)  -> {"exit_logits": (b, C), "payload": pytree}
     cloud_fn(payload_subset) -> {"logits": (m, C)}
+
+    `branch` is the index (into plan.calibrators) of the exit the edge
+    partition actually computes; defaults to plan.exit_index. use_kernel
+    routes gating through the fused Pallas exit-gate kernel when the
+    branch's calibration is pure temperature scaling.
     """
 
     def __init__(
         self,
         edge_fn: Callable,
         cloud_fn: Callable,
-        policy: OffloadPolicy,
+        plan: OffloadPlan,
         payload_nbytes: Optional[Callable[[Any], int]] = None,
+        branch: Optional[int] = None,
+        use_kernel: bool = False,
     ):
         self.edge_fn = edge_fn
         self.cloud_fn = cloud_fn
-        self.policy = policy
+        self.plan = plan
+        self.branch = plan.exit_index if branch is None else branch
+        if not 0 <= self.branch < plan.num_exits:
+            raise ValueError(
+                f"deployed branch index {self.branch} has no calibrator state "
+                f"(plan covers {plan.num_exits} exit(s))"
+            )
+        self.use_kernel = use_kernel
         self.payload_nbytes = payload_nbytes or (
             lambda p: sum(x.nbytes for x in jax.tree.leaves(p))
         )
         self.stats = EngineStats()
 
+    @property
+    def policy(self) -> OffloadPlan:  # legacy name
+        return self.plan
+
     def infer(self, batch) -> Dict[str, np.ndarray]:
         edge_out = self.edge_fn(batch)
         exit_logits = edge_out["exit_logits"]
-        gate = self.policy.gate(exit_logits, branch=self.policy.exit_index)
+        gate = self.plan.gate(exit_logits, branch=self.branch,
+                              use_kernel=self.use_kernel)
         mask = np.asarray(gate.exit_mask)
         pred = np.asarray(gate.prediction).copy()
         conf = np.asarray(gate.confidence).copy()
@@ -90,8 +111,13 @@ class OffloadEngine:
 
 
 # ------------------------------------------------------- concrete bindings
-def convnet_engine(params, policy: OffloadPolicy, branch: int = 1) -> OffloadEngine:
-    """The paper's system: B-AlexNet split at side branch `branch`."""
+def convnet_engine(params, plan: OffloadPlan, branch: int = 1,
+                   use_kernel: bool = False) -> OffloadEngine:
+    """The paper's system: B-AlexNet split at side branch `branch`.
+
+    Physical branch k (1-based) gates with plan.calibrators[k-1] -- a plan
+    calibrated per exit deploys any branch without re-fitting.
+    """
     from repro.models import convnet
 
     @jax.jit
@@ -103,10 +129,11 @@ def convnet_engine(params, policy: OffloadPolicy, branch: int = 1) -> OffloadEng
     def cloud(hidden):
         return {"logits": convnet.cloud_forward(params, hidden, from_branch=branch)}
 
-    return OffloadEngine(edge, cloud, policy)
+    return OffloadEngine(edge, cloud, plan, branch=branch - 1, use_kernel=use_kernel)
 
 
-def lm_engine(params, cfg, policy: OffloadPolicy, exit_index: int = 0) -> OffloadEngine:
+def lm_engine(params, cfg, plan: OffloadPlan, exit_index: int = 0,
+              use_kernel: bool = False) -> OffloadEngine:
     """LM variant: classify-at-prefill; edge = blocks up to the exit."""
     from repro.models import transformer
 
@@ -120,4 +147,4 @@ def lm_engine(params, cfg, policy: OffloadPolicy, exit_index: int = 0) -> Offloa
         out = transformer.cloud_forward(params, cfg, hidden, exit_index=exit_index)
         return {"logits": out["logits"][:, 0, :]}
 
-    return OffloadEngine(edge, cloud, policy)
+    return OffloadEngine(edge, cloud, plan, branch=exit_index, use_kernel=use_kernel)

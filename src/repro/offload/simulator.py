@@ -33,19 +33,38 @@ def simulate_batches(
     exit_logits_list: Sequence[np.ndarray],  # per branch, (N, C) test logits
     final_logits: np.ndarray,  # (N, C) cloud main-exit logits
     labels: np.ndarray,
-    p_tar: float,
-    temperatures: Sequence[float],
-    profile: L.LatencyProfile,
+    p_tar: float = None,
+    temperatures: Sequence[float] = None,
+    profile: L.LatencyProfile = None,
     batch_size: int = 512,
     branches: Sequence[int] = (1,),
+    plan=None,
 ) -> List[BatchOutcome]:
-    """branches: which physical branches are deployed, e.g. (1,) or (1, 2)."""
+    """branches: which physical branches are deployed, e.g. (1,) or (1, 2).
+    exit_logits_list and the legacy `temperatures` run parallel to
+    `branches` (entry i describes deployed branch branches[i]).
+
+    Calibration comes either from `plan` (an OffloadPlan whose calibrators
+    are per-exit, shallowest first: physical branch k gates with
+    calibrator state k-1, matching OffloadEngine) or from the legacy
+    `temperatures` list with an explicit `p_tar`.
+    """
+    if profile is None:
+        raise ValueError("simulate_batches needs a LatencyProfile")
+    if plan is not None:
+        if p_tar is None:
+            p_tar = plan.p_tar
+    elif temperatures is None or p_tar is None:
+        raise ValueError("simulate_batches needs (p_tar, temperatures) or plan")
     n = len(labels)
     n_br = len(branches)
     conf = np.zeros((n_br, n))
     pred = np.zeros((n_br, n), np.int64)
     for i, logits in enumerate(exit_logits_list[:n_br]):
-        c, p, _ = gate_statistics(logits, temperatures[i])
+        if plan is not None:
+            c, p, _ = gate_statistics(plan.calibrated_logits(logits, branches[i] - 1))
+        else:
+            c, p, _ = gate_statistics(logits, temperatures[i])
         conf[i], pred[i] = np.asarray(c), np.asarray(p)
     final_pred = np.asarray(np.argmax(final_logits, axis=-1))
 

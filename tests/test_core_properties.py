@@ -1,0 +1,54 @@
+"""Hypothesis property tests on the core invariants.
+
+Kept separate from test_core.py so the deterministic suite still collects
+when hypothesis is absent (it is a dev-only dependency; see
+requirements-dev.txt)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import apply_gate, fit_temperature, gate_statistics
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    st.integers(2, 30),  # classes
+    st.floats(0.1, 10.0),  # temperature
+    st.integers(0, 2**31 - 1),
+)
+def test_property_temperature_monotone_confidence(c, t, seed):
+    """T>1 softens: confidence at T >= 1 is <= confidence at T=1 <= at T<1.
+    Also prediction is temperature-invariant."""
+    z = jax.random.normal(jax.random.PRNGKey(seed), (8, c)) * 4
+    c1, p1, _ = gate_statistics(z, 1.0)
+    ct, pt, _ = gate_statistics(z, t)
+    np.testing.assert_array_equal(p1, pt)
+    if t >= 1.0:
+        assert bool(jnp.all(ct <= c1 + 1e-6))
+    else:
+        assert bool(jnp.all(ct >= c1 - 1e-6))
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 20), st.integers(0, 2**31 - 1), st.floats(0.3, 0.99))
+def test_property_gate_mask_iff_confidence(c, seed, p_tar):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (32, c)) * 2
+    res = apply_gate(z, p_tar)
+    np.testing.assert_array_equal(res.exit_mask, res.confidence >= p_tar)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.floats(1.5, 6.0), st.integers(0, 2**31 - 1))
+def test_property_fit_recovers_planted_temperature(t_true, seed):
+    """If data is generated from softmax(z/T*), fitting on z recovers ~T*."""
+    key = jax.random.PRNGKey(seed)
+    n, c = 6000, 8
+    z = jax.random.normal(key, (n, c)) * 3
+    labels = jax.random.categorical(jax.random.PRNGKey(seed ^ 1), z / t_true)
+    T, _ = fit_temperature(z, labels)
+    assert abs(float(T) - t_true) / t_true < 0.25

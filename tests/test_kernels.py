@@ -1,10 +1,12 @@
 """Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracle
-(interpret=True executes the kernel body on CPU)."""
+(interpret=True executes the kernel body on CPU).
+
+Hypothesis property sweeps live in test_kernels_properties.py (skipped when
+hypothesis is not installed)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.ops import exit_gate
 from repro.kernels.ref import exit_gate_ref
@@ -49,25 +51,6 @@ def test_exit_gate_extreme_logits():
     assert not bool(jnp.isnan(conf).any() | jnp.isnan(ent).any())
     np.testing.assert_allclose(conf, [1.0], atol=1e-6)
     assert int(pred[0]) == 0
-
-
-@settings(deadline=None, max_examples=25)
-@given(
-    st.integers(1, 12),
-    st.integers(2, 900),
-    st.floats(0.2, 5.0),
-    st.integers(0, 2**31 - 1),
-)
-def test_property_exit_gate_matches_ref(rows, vocab, temp, seed):
-    z = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) * 5
-    conf, pred, ent = exit_gate(z, temp)
-    rconf, rent, rpred = exit_gate_ref(z, temp)
-    np.testing.assert_allclose(conf, rconf, rtol=5e-5, atol=1e-6)
-    np.testing.assert_allclose(ent, rent, rtol=5e-5, atol=5e-5)
-    np.testing.assert_array_equal(pred, rpred)
-    # invariants: conf in (0,1]; entropy in [0, log V]; conf=1 -> ent~0
-    assert bool(jnp.all((conf > 0) & (conf <= 1 + 1e-6)))
-    assert bool(jnp.all((ent >= -1e-5) & (ent <= np.log(vocab) + 1e-4)))
 
 
 def test_core_gate_kernel_path_equals_jnp_path():
@@ -115,15 +98,3 @@ class TestCalibNllKernel:
         t_r, _ = fit_temperature(z, y)
         assert abs(float(t_k) - float(t_r)) < 0.05
         assert 2.2 < float(t_k) < 2.9  # planted T* = 2.5
-
-    @settings(deadline=None, max_examples=15)
-    @given(st.integers(2, 10), st.integers(3, 400), st.floats(0.3, 4.0),
-           st.integers(0, 2**31 - 1))
-    def test_property_nll_matches(self, rows, vocab, temp, seed):
-        from repro.core.calibration import nll as nll_ref
-        from repro.kernels.ops import calib_stats
-
-        z = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) * 5
-        y = jax.random.randint(jax.random.PRNGKey(seed ^ 3), (rows,), 0, vocab)
-        n, _, _ = calib_stats(z, y, temp)
-        np.testing.assert_allclose(float(n), float(nll_ref(z, y, temp)), rtol=5e-5)

@@ -1,0 +1,48 @@
+"""Hypothesis property sweeps of the Pallas kernels against the jnp oracle.
+
+Kept separate from test_kernels.py so the deterministic suite still
+collects when hypothesis is absent (dev-only dependency; see
+requirements-dev.txt)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import exit_gate
+from repro.kernels.ref import exit_gate_ref
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    st.integers(1, 12),
+    st.integers(2, 900),
+    st.floats(0.2, 5.0),
+    st.integers(0, 2**31 - 1),
+)
+def test_property_exit_gate_matches_ref(rows, vocab, temp, seed):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) * 5
+    conf, pred, ent = exit_gate(z, temp)
+    rconf, rent, rpred = exit_gate_ref(z, temp)
+    np.testing.assert_allclose(conf, rconf, rtol=5e-5, atol=1e-6)
+    np.testing.assert_allclose(ent, rent, rtol=5e-5, atol=5e-5)
+    np.testing.assert_array_equal(pred, rpred)
+    # invariants: conf in (0,1]; entropy in [0, log V]; conf=1 -> ent~0
+    assert bool(jnp.all((conf > 0) & (conf <= 1 + 1e-6)))
+    assert bool(jnp.all((ent >= -1e-5) & (ent <= np.log(vocab) + 1e-4)))
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(2, 10), st.integers(3, 400), st.floats(0.3, 4.0),
+       st.integers(0, 2**31 - 1))
+def test_property_nll_matches(rows, vocab, temp, seed):
+    from repro.core.calibration import nll as nll_ref
+    from repro.kernels.ops import calib_stats
+
+    z = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) * 5
+    y = jax.random.randint(jax.random.PRNGKey(seed ^ 3), (rows,), 0, vocab)
+    n, _, _ = calib_stats(z, y, temp)
+    np.testing.assert_allclose(float(n), float(nll_ref(z, y, temp)), rtol=5e-5)

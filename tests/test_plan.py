@@ -1,0 +1,351 @@
+"""OffloadPlan + Calibrator protocol: the deployable-artifact contract.
+
+Covers the registry, JSON round-trip bit-identity, equivalence of the
+calibrator-state gating with the legacy temperature-list paths, jit/vmap
+compatibility of CalibratorState pytrees, and the engine regression that a
+deployed branch gates with ITS OWN calibrator state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CalibratorState,
+    OffloadPlan,
+    apply_calibrator,
+    apply_gate,
+    available_calibrators,
+    cascade_gate,
+    choose_partition,
+    gate_statistics,
+    get_calibrator,
+    make_plan,
+    select_partition,
+)
+from repro.core.calibration import TemperatureScaling, fit_temperature
+
+
+@pytest.fixture(scope="module")
+def val_batch():
+    z = jax.random.normal(jax.random.PRNGKey(0), (512, 10)) * 4
+    y = jax.random.randint(jax.random.PRNGKey(1), (512,), 0, 10)
+    return z, y
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_lookup():
+    assert set(available_calibrators()) >= {"temperature", "vector", "identity"}
+    for name in available_calibrators():
+        assert get_calibrator(name).name == name
+
+
+def test_registry_unknown_name():
+    with pytest.raises(KeyError, match="unknown calibrator"):
+        get_calibrator("platt")
+
+
+def test_fit_apply_contract(val_batch):
+    z, y = val_batch
+    for name in ("temperature", "vector", "identity"):
+        cal = get_calibrator(name)
+        state = cal.fit(z, y)
+        assert state.kind == name
+        out = cal.apply(state, z)
+        assert out.shape == z.shape
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(apply_calibrator(state, z))
+        )
+
+
+# ------------------------------------------------- legacy-path equivalence
+def test_temperature_state_matches_legacy_gating(val_batch):
+    """TemperatureScaling.apply + T=1 gate == legacy gate at T, bit-exact
+    predictions/mask and allclose confidences; the plan fast path is
+    bit-exact because it routes the raw logits + T to the same apply_gate."""
+    z, y = val_batch
+    T, _ = fit_temperature(z, y)
+    T = float(np.float32(float(T)))  # exactly float32-representable
+    state = TemperatureScaling.from_temperature(T)
+    legacy = apply_gate(z, 0.8, temperature=T)
+    via_apply = apply_gate(apply_calibrator(state, z), 0.8, temperature=1.0)
+    np.testing.assert_array_equal(legacy.prediction, via_apply.prediction)
+    np.testing.assert_array_equal(legacy.exit_mask, via_apply.exit_mask)
+    np.testing.assert_allclose(legacy.confidence, via_apply.confidence,
+                               rtol=1e-6, atol=1e-7)
+
+    plan = OffloadPlan(p_tar=0.8, calibrators=[state])
+    fast = plan.gate(z)
+    np.testing.assert_array_equal(legacy.exit_mask, fast.exit_mask)
+    np.testing.assert_array_equal(
+        np.asarray(legacy.confidence), np.asarray(fast.confidence)
+    )
+
+
+def test_make_plan_matches_make_policy_temperatures(val_batch):
+    z, y = val_batch
+    plan = make_plan([z], y, p_tar=0.8)
+    T, _ = fit_temperature(z, y)
+    np.testing.assert_allclose(plan.temperatures[0], float(T), rtol=1e-6)
+
+
+def test_cascade_gate_plan_equals_temperature_list(val_batch):
+    z, y = val_batch
+    z2 = jax.random.normal(jax.random.PRNGKey(2), (512, 10)) * 2
+    final = jax.random.normal(jax.random.PRNGKey(3), (512, 10)) * 2
+    temps = [1.7, 3.1]
+    plan = OffloadPlan(
+        p_tar=0.7,
+        calibrators=[TemperatureScaling.from_temperature(t) for t in temps],
+    )
+    a = cascade_gate([z, z2], final, 0.7, temps)
+    b = cascade_gate([z, z2], final, plan=plan)
+    np.testing.assert_array_equal(a["exit_index"], b["exit_index"])
+    np.testing.assert_array_equal(a["prediction"], b["prediction"])
+
+
+def test_choose_partition_plan_equals_temperature_list(val_batch):
+    z, _ = val_batch
+    z2 = jax.random.normal(jax.random.PRNGKey(2), (512, 10)) * 0.01
+    kwargs = dict(
+        edge_times_s=[1e-3, 2e-3],
+        cloud_times_s=[5e-3, 4e-3],
+        payload_bytes=[65536, 24576],
+        exit_layer_indices=[0, 1],
+        uplink_bps=18.8e6,
+    )
+    legacy = choose_partition([z, z2], temperatures=[1.0, 1.0], p_tar=0.8, **kwargs)
+    plan = OffloadPlan(
+        p_tar=0.8,
+        calibrators=[TemperatureScaling.from_temperature(1.0)] * 2,
+    )
+    via_plan = choose_partition([z, z2], plan=plan, **kwargs)
+    assert [c.exit_index for c in legacy] == [c.exit_index for c in via_plan]
+    np.testing.assert_allclose(
+        [c.expected_latency_s for c in legacy],
+        [c.expected_latency_s for c in via_plan],
+    )
+
+    updated, cands = select_partition(plan, [np.asarray(z), np.asarray(z2)], **kwargs)
+    assert updated.exit_index == cands[0].exit_index
+    assert updated.partition_layer == cands[0].partition_layer
+    assert updated.p_tar == plan.p_tar  # calibration untouched
+
+
+def test_simulator_plan_maps_physical_branches(val_batch):
+    """Regression: a per-exit plan simulated with branches=(2,) must gate
+    branch-2 logits with calibrator state 1 (physical mapping, matching
+    OffloadEngine), not with state 0."""
+    from repro.offload import latency as L
+    from repro.offload.simulator import simulate_batches
+
+    z, y = val_batch
+    final = jax.random.normal(jax.random.PRNGKey(3), (512, 10)) * 4
+    prof = L.paper_2020()
+    t2 = 5.0
+    plan = OffloadPlan(
+        p_tar=0.8,
+        calibrators=[
+            TemperatureScaling.from_temperature(1.0),
+            TemperatureScaling.from_temperature(t2),
+        ],
+    )
+    via_plan = simulate_batches(
+        [np.asarray(z)], np.asarray(final), np.asarray(y), profile=prof,
+        batch_size=128, branches=(2,), plan=plan,
+    )
+    legacy = simulate_batches(
+        [np.asarray(z)], np.asarray(final), np.asarray(y), 0.8, [t2], prof,
+        batch_size=128, branches=(2,),
+    )
+    wrong = simulate_batches(
+        [np.asarray(z)], np.asarray(final), np.asarray(y), 0.8, [1.0], prof,
+        batch_size=128, branches=(2,),
+    )
+    assert [o.on_device_frac for o in legacy] != [o.on_device_frac for o in wrong]
+    for a, b in zip(legacy, via_plan):
+        assert a.on_device_frac == b.on_device_frac
+        assert a.accuracy == b.accuracy
+
+
+def test_simulator_plan_equals_temperature_list(val_batch):
+    from repro.offload import latency as L
+    from repro.offload.simulator import simulate_batches
+
+    z, y = val_batch
+    final = jax.random.normal(jax.random.PRNGKey(3), (512, 10)) * 4
+    prof = L.paper_2020()
+    legacy = simulate_batches(
+        [np.asarray(z)], np.asarray(final), np.asarray(y), 0.8, [2.0], prof,
+        batch_size=128,
+    )
+    plan = OffloadPlan(
+        p_tar=0.8, calibrators=[TemperatureScaling.from_temperature(2.0)]
+    )
+    via_plan = simulate_batches(
+        [np.asarray(z)], np.asarray(final), np.asarray(y), profile=prof,
+        batch_size=128, plan=plan,
+    )
+    for a, b in zip(legacy, via_plan):
+        assert a.accuracy == b.accuracy
+        assert a.on_device_frac == b.on_device_frac
+        np.testing.assert_allclose(a.time_s, b.time_s)
+
+
+# ----------------------------------------------------------- serialization
+def test_plan_json_round_trip_bit_identical(val_batch):
+    """A plan serialized to JSON and reloaded produces bit-identical gate
+    decisions AND statistics on a fixed validation batch -- for the paper's
+    temperature scaling and for vector scaling (non-scalar state)."""
+    z, y = val_batch
+    for method in ("temperature", "vector", "identity"):
+        plan = make_plan([z], y, p_tar=0.85, method=method,
+                         metadata={"fit_on": "val_batch"})
+        reloaded = OffloadPlan.from_json(plan.to_json())
+        assert reloaded.to_dict() == plan.to_dict()
+        g0, g1 = plan.gate(z), reloaded.gate(z)
+        np.testing.assert_array_equal(np.asarray(g0.exit_mask), np.asarray(g1.exit_mask))
+        np.testing.assert_array_equal(np.asarray(g0.prediction), np.asarray(g1.prediction))
+        np.testing.assert_array_equal(
+            np.asarray(g0.confidence), np.asarray(g1.confidence)
+        )
+
+
+def test_plan_save_load(tmp_path, val_batch):
+    z, y = val_batch
+    plan = make_plan([z], y, p_tar=0.9).with_partition(0, 3)
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    reloaded = OffloadPlan.load(path)
+    assert reloaded.partition_layer == 3
+    assert reloaded.exit_index == 0
+    np.testing.assert_array_equal(
+        np.asarray(plan.gate(z).exit_mask), np.asarray(reloaded.gate(z).exit_mask)
+    )
+
+
+def test_plan_rejects_newer_format(val_batch):
+    z, y = val_batch
+    d = make_plan([z], y, p_tar=0.8).to_dict()
+    d["version"] = 99
+    with pytest.raises(ValueError, match="newer"):
+        OffloadPlan.from_dict(d)
+
+
+# --------------------------------------------------------------- jit/vmap
+def test_calibrator_state_jit_vmap(val_batch):
+    z, _ = val_batch
+
+    @jax.jit
+    def gate_mask(state, logits):
+        return apply_calibrator(state, logits).argmax(-1)
+
+    s1 = TemperatureScaling.from_temperature(1.0)
+    s5 = TemperatureScaling.from_temperature(5.0)
+    np.testing.assert_array_equal(gate_mask(s1, z), np.asarray(z.argmax(-1)))
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), s1, s5)
+    batched = jax.vmap(apply_calibrator, in_axes=(0, None))(stacked, z)
+    assert batched.shape == (2,) + z.shape
+    np.testing.assert_allclose(np.asarray(batched[1]), np.asarray(z) / 5.0,
+                               rtol=1e-6)
+
+    leaves, treedef = jax.tree.flatten(s5)
+    assert jax.tree.unflatten(treedef, leaves).kind == "temperature"
+
+
+def test_plan_gate_jit_with_traced_state(val_batch):
+    """The gate fast path must trace when the CalibratorState arrives as a
+    jit ARGUMENT (kind dispatch is static aux data; no float() on params)."""
+    z, _ = val_batch
+
+    @jax.jit
+    def gated_conf(state, logits):
+        return OffloadPlan(p_tar=0.8, calibrators=[state]).gate(logits).confidence
+
+    s = TemperatureScaling.from_temperature(2.0)
+    eager = OffloadPlan(p_tar=0.8, calibrators=[s]).gate(z).confidence
+    np.testing.assert_allclose(np.asarray(gated_conf(s, z)), np.asarray(eager),
+                               rtol=1e-6)
+
+
+def test_cascade_gate_rejects_short_plan(val_batch):
+    z, _ = val_batch
+    plan = OffloadPlan(
+        p_tar=0.8, calibrators=[TemperatureScaling.from_temperature(1.0)]
+    )
+    with pytest.raises(ValueError, match="no calibrator state"):
+        cascade_gate([z, z], z, plan=plan)
+
+
+# --------------------------------------- engine gates with deployed branch
+def test_engine_gates_with_deployed_branch_state():
+    """Regression for the exit_index bug: convnet_engine(branch=2) must gate
+    with exit 2's calibrator state, not the plan's default exit 0."""
+    from repro.data.synthetic import cifar_like
+    from repro.models import convnet
+    from repro.offload.engine import convnet_engine
+
+    data = cifar_like(n_train=64, n_val=64, n_test=256, seed=7)
+    params = convnet.init_params(jax.random.PRNGKey(0))
+    x = jnp.asarray(data.test_x[:256])
+
+    t_sharp, t_soft = 0.05, 20.0  # exit0 sharpens, exit1 softens
+    plan = OffloadPlan(
+        p_tar=0.5,
+        calibrators=[
+            TemperatureScaling.from_temperature(t_sharp),
+            TemperatureScaling.from_temperature(t_soft),
+        ],
+    )
+    engine = convnet_engine(params, plan, branch=2)
+    out = engine.infer({"images": x})
+
+    logits2, _ = convnet.edge_forward(params, x, branch=2)
+    conf_right, _, _ = gate_statistics(logits2, t_soft)
+    conf_wrong, _, _ = gate_statistics(logits2, t_sharp)
+    mask_right = np.asarray(conf_right) >= 0.5
+    mask_wrong = np.asarray(conf_wrong) >= 0.5
+    assert not np.array_equal(mask_right, mask_wrong)  # the test has power
+    np.testing.assert_array_equal(out["on_device"], mask_right)
+
+
+def test_engine_rejects_branch_without_state():
+    from repro.models import convnet
+    from repro.offload.engine import convnet_engine
+
+    params = convnet.init_params(jax.random.PRNGKey(0))
+    plan = OffloadPlan(
+        p_tar=0.5, calibrators=[TemperatureScaling.from_temperature(1.0)]
+    )
+    with pytest.raises(ValueError, match="no calibrator state"):
+        convnet_engine(params, plan, branch=2)
+
+
+# ------------------------------------------------ sequential cascade (fix)
+def test_sequential_calibration_matches_subset_fit():
+    """The NLL-weighted sequential fit must agree with fitting directly on
+    the reached subset (the padded-gather version duplicated sample 0)."""
+    from repro.core.calibration import calibrate_cascade
+
+    def overconfident(key, n=3000, c=10, scale=8.0, acc=0.7):
+        k1, k2, k3 = jax.random.split(key, 3)
+        labels = jax.random.randint(k1, (n,), 0, c)
+        correct = jax.random.uniform(k2, (n,)) < acc
+        pred = jnp.where(
+            correct, labels,
+            (labels + 1 + jax.random.randint(k3, (n,), 0, c - 1)) % c,
+        )
+        z = jax.random.normal(k3, (n, c))
+        return z.at[jnp.arange(n), pred].add(scale), labels
+
+    z0, y = overconfident(jax.random.PRNGKey(12))
+    z1, _ = overconfident(jax.random.PRNGKey(13), acc=0.9)
+
+    p_tar = 0.8
+    temps = calibrate_cascade([z0, z1], y, sequential=True, p_tar=p_tar)
+
+    conf0, _, _ = gate_statistics(z0, temps[0])
+    reach = np.asarray(conf0) < p_tar
+    assert 0 < reach.sum() < len(reach)  # the gate actually splits the set
+    T_subset, _ = fit_temperature(z1[reach], y[reach])
+    np.testing.assert_allclose(temps[1], float(T_subset), rtol=1e-3)
