@@ -1,11 +1,14 @@
 """Benchmark entry point: one function per paper table/figure + the kernel
-microbench and the roofline summary. Prints ``name,us_per_call,derived`` CSV.
+microbench, the serving-runtime bench, and the roofline summary. Prints
+``name,us_per_call,derived`` CSV; the serving bench also writes the
+machine-readable ``BENCH_serving.json`` artifact.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--epochs N]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -109,6 +112,74 @@ def bench_smoke_decode(arch="qwen3-8b"):
     return us, f"arch={arch}-smoke"
 
 
+def bench_serving_runtime(n_requests=2000, out_path="BENCH_serving.json"):
+    """Event-driven serving runtime under a congested Markov link: static
+    calibrated plan vs the online controller re-scoring the same
+    calibrators. The scenario is repro.serving.scenarios.run_congested_markov
+    -- the SAME one the acceptance test pins down -- so the benchmark and
+    the test cannot drift apart. Writes BENCH_serving.json with the fully
+    deterministic simulated metrics (p50/p95/p99, deadline-miss, offload,
+    accuracy); the wall-clock sim throughput goes to the CSV row only."""
+    from repro.core.calibration import TemperatureScaling
+    from repro.core.policy import OffloadPlan
+    from repro.serving.scenarios import (
+        run_congested_markov,
+        synthetic_cascade_logits,
+    )
+
+    n = 2048
+    exits, final, y = synthetic_cascade_logits(n)
+    plan = OffloadPlan(
+        p_tar=0.8,
+        calibrators=[TemperatureScaling.from_temperature(1.0),
+                     TemperatureScaling.from_temperature(1.0)],
+    )
+
+    def scenario(with_controller):
+        t0 = time.perf_counter()
+        tel = run_congested_markov(
+            plan, exits, final, y,
+            n_requests=n_requests, with_controller=with_controller,
+        )
+        return tel.summary(), time.perf_counter() - t0
+
+    static, wall_s = scenario(False)
+    ctrl, wall_c = scenario(True)
+    # metadata derived from the scenario module itself, never duplicated
+    import inspect
+
+    from repro.serving.scenarios import congested_markov_network
+
+    sig = inspect.signature(run_congested_markov).parameters
+    net = congested_markov_network()
+    payload = {
+        "scenario": {
+            "arrival_rate_hz": sig["arrival_rate_hz"].default,
+            "n_requests": n_requests,
+            "network": (
+                f"markov(good={net.good_bps / 1e6:g}Mbps,"
+                f"bad={net.bad_bps / 1e6:g}Mbps)"
+            ),
+            "deadline_ms": sig["deadline_s"].default * 1e3,
+            "profile": "paper_2020",
+        },
+        "static": static,
+        "controller": ctrl,
+        "p99_improvement": 1.0 - ctrl["p99_ms"] / static["p99_ms"],
+        "miss_rate_improvement": static["deadline_miss_rate"]
+        - ctrl["deadline_miss_rate"],
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    us = (wall_s + wall_c) / (2 * n_requests) * 1e6
+    return us, (
+        f"sim_rps={2 * n_requests / (wall_s + wall_c):.0f};"
+        f"p99_static_ms={static['p99_ms']:.1f};"
+        f"p99_ctrl_ms={ctrl['p99_ms']:.1f};"
+        f"artifact={out_path}"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="skip figure benchmarks")
@@ -123,6 +194,7 @@ def main() -> None:
         ("calibration_fit_temperature", *bench_calibration_fit()),
         ("b_alexnet_train_step", *bench_b_alexnet_step()),
         ("smoke_decode_step", *bench_smoke_decode()),
+        ("serving_runtime_per_request", *bench_serving_runtime()),
     ]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,145 @@
+"""Serving under load: arrival rate x network regime, calibrated vs not.
+
+The paper's experiment prices offloading at one fixed 18.8 Mbps uplink and
+reports mean batch latency. This example runs the event-driven serving
+runtime instead: N requests arrive as a Poisson stream at each rate, every
+refused sample queues through a microbatcher, ONE shared uplink (fixed /
+Markov good-bad Wi-Fi / bandwidth-trace replay), and the cloud tier --
+reporting tail latency and deadline misses, which the static math cannot
+express.
+
+Two plans are compared on identical logits and identical randomness:
+  * conventional -- identity calibration (T=1), the overconfident baseline;
+  * calibrated   -- per-exit Temperature Scaling (the paper's method).
+With --controller, the Edgent-style online controller re-scores the
+calibrated plan's calibrators against measured bandwidth each second.
+
+Run:  PYTHONPATH=src python examples/serve_under_load.py [--controller]
+      [--requests 2000]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.policy import make_plan
+from repro.offload import latency as L
+from repro.serving import (
+    ControllerConfig,
+    FixedRateNetwork,
+    LogitsCore,
+    MarkovNetwork,
+    OnlineController,
+    RuntimeConfig,
+    ServingRuntime,
+    TraceNetwork,
+    poisson_workload,
+)
+
+
+def synthetic_exit_logits(n, c=10, seed=0, hard_frac=0.35, overconf=3.0):
+    """A deterministic stand-in for a trained B-AlexNet's validation/test
+    logits: a hard fraction of samples that shallow features cannot
+    separate, and an overconfidence factor that mimics the miscalibration
+    Temperature Scaling later removes (paper Fig. 2)."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, c, n)
+    hard = rng.random(n) < hard_frac
+    z1 = rng.normal(size=(n, c)).astype(np.float32)
+    z1[np.arange(n), y] += np.where(hard, 0.2, 2.5)
+    z1 *= overconf  # shallow head: overconfident
+    hard2 = hard & (rng.random(n) < 0.6)  # the deeper exit resolves some
+    z2 = rng.normal(size=(n, c)).astype(np.float32)
+    z2[np.arange(n), y] += np.where(hard2, 0.3, 3.0)
+    z2 *= overconf
+    final = rng.normal(size=(n, c)).astype(np.float32) * 0.3
+    final[np.arange(n), y] += 4.0  # cloud main head: near-oracle
+    return {1: z1, 2: z2}, final, y
+
+
+def networks(profile):
+    return {
+        "fixed": lambda: FixedRateNetwork(profile.uplink_bps),
+        "markov": lambda: MarkovNetwork(
+            good_bps=profile.uplink_bps, bad_bps=2e6,
+            p_good_to_bad=0.4, p_bad_to_good=0.2, dwell_s=1.0, seed=7,
+        ),
+        "trace": lambda: TraceNetwork(
+            [0.0, 4.0, 6.0, 10.0],
+            [profile.uplink_bps, 3e6, 8e6, profile.uplink_bps],
+            period_s=14.0,
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--controller", action="store_true",
+                    help="online re-scoring for the calibrated plan")
+    args = ap.parse_args()
+
+    profile = L.paper_2020()
+    p_tar = 0.85
+    n_val = n_test = 4096
+    val_exits, val_final, val_y = synthetic_exit_logits(n_val, seed=0)
+    test_exits, test_final, test_y = synthetic_exit_logits(n_test, seed=1)
+
+    plans = {}
+    for name, calibrated in (("conventional", False), ("calibrated", True)):
+        plans[name] = make_plan(
+            [val_exits[1], val_exits[2]], val_y, p_tar=p_tar,
+            calibrated=calibrated,
+        )
+    print(f"fitted temperatures (calibrated): "
+          f"{[round(t, 2) for t in plans['calibrated'].temperatures]}  "
+          f"p_tar={p_tar}")
+
+    print(f"\n{'net':7s} {'rate':>5s} {'plan':12s} {'p50ms':>8s} {'p95ms':>8s} "
+          f"{'p99ms':>8s} {'miss%':>6s} {'offl%':>6s} {'acc':>5s} {'sw':>3s}")
+    for net_name, make_net in networks(profile).items():
+        for rate_hz in (20, 60, 120):
+            for plan_name, plan in plans.items():
+                core = LogitsCore(test_exits, test_final, plan, labels=test_y)
+                reqs = poisson_workload(
+                    rate_hz, args.requests, n_test, deadline_s=0.1, seed=11
+                )
+                controller = None
+                if args.controller and plan_name == "calibrated":
+                    controller = OnlineController(
+                        plan, profile, val_exits, final_logits=val_final,
+                        labels=val_y,
+                        config=ControllerConfig(
+                            interval_s=1.0, window_s=2.0,
+                            p_tar_grid=(0.5, 0.7, p_tar),
+                            min_accuracy=0.9,
+                        ),
+                    )
+                rt = ServingRuntime(
+                    core, profile, plan, reqs, network=make_net(),
+                    config=RuntimeConfig(max_batch=8, batch_window_s=0.02),
+                    controller=controller,
+                )
+                s = rt.run().summary()
+                print(
+                    f"{net_name:7s} {rate_hz:5d} {plan_name:12s} "
+                    f"{s['p50_ms']:8.1f} {s['p95_ms']:8.1f} {s['p99_ms']:8.1f} "
+                    f"{100 * s['deadline_miss_rate']:6.1f} "
+                    f"{100 * s['offload_rate']:6.1f} {s['accuracy']:5.3f} "
+                    f"{s['controller_switches']:3d}"
+                )
+    print(
+        "\nreading the table: the conventional (overconfident) plan keeps"
+        "\nmore samples on-device -- low latency, degraded accuracy; the"
+        "\ncalibrated plan refuses unreliable exits, which holds accuracy"
+        "\nbut makes it sensitive to the link. Under markov/trace regimes"
+        "\nat high arrival rates its tail latency collapses unless the"
+        "\nonline controller (--controller) re-scores the partition."
+    )
+
+
+if __name__ == "__main__":
+    main()

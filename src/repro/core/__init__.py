@@ -44,4 +44,5 @@ from repro.core.policy import (  # noqa: F401
     OffloadPolicy,
     make_plan,
     make_policy,
+    rescore_plan,
 )

@@ -36,9 +36,13 @@ def expected_latency(
     payload_bytes: int,
     offload_prob: float,
     uplink_bps: float,
+    comm_wait_factor: float = 1.0,
 ) -> float:
+    """Neurosurgeon objective. `comm_wait_factor` scales the transfer term
+    for contention on a shared link (1.0 = the paper's uncontended link);
+    the online controller passes an M/M/1 busy-ratio correction here."""
     comm = payload_bytes * 8.0 / uplink_bps
-    return edge_time_s + offload_prob * (comm + cloud_time_s)
+    return edge_time_s + offload_prob * (comm * comm_wait_factor + cloud_time_s)
 
 
 def choose_partition(

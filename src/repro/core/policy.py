@@ -99,17 +99,32 @@ class OffloadPlan:
             use_kernel=use_kernel,
         )
 
-    def with_partition(self, exit_index: int, partition_layer: int) -> "OffloadPlan":
-        """New plan with the chosen partition point recorded."""
-        return OffloadPlan(
+    def _copy(self, **overrides) -> "OffloadPlan":
+        """Fresh OffloadPlan (never the OffloadPolicy shim subclass, whose
+        __init__ takes a temperature list) with mutable fields copied --
+        the single place plan fields are threaded through, so new fields
+        survive with_partition/with_p_tar automatically."""
+        kw = dict(
             p_tar=self.p_tar,
             calibrators=list(self.calibrators),
             criterion=self.criterion,
             entropy_threshold=self.entropy_threshold,
-            exit_index=exit_index,
-            partition_layer=partition_layer,
+            exit_index=self.exit_index,
+            partition_layer=self.partition_layer,
             metadata=dict(self.metadata),
         )
+        kw.update(overrides)
+        return OffloadPlan(**kw)
+
+    def with_partition(self, exit_index: int, partition_layer: int) -> "OffloadPlan":
+        """New plan with the chosen partition point recorded."""
+        return self._copy(exit_index=exit_index, partition_layer=partition_layer)
+
+    def with_p_tar(self, p_tar: float) -> "OffloadPlan":
+        """New plan with a different effective reliability target -- the
+        calibrators are untouched, so the online controller can move the
+        gate without re-fitting."""
+        return self._copy(p_tar=float(p_tar))
 
     # ------------------------------------------------------ serialization
     def to_dict(self) -> dict:
@@ -198,6 +213,122 @@ def make_plan(
         exit_index=exit_index,
         metadata=metadata or {},
     )
+
+
+# ----------------------------------------------------- online re-scoring
+def rescore_plan(
+    plan: OffloadPlan,
+    exit_logits_list,
+    edge_times_s: Sequence[float],
+    cloud_times_s: Sequence[float],
+    payload_bytes: Sequence[int],
+    uplink_bps: float,
+    labels=None,
+    final_logits=None,
+    p_tar_grid: Optional[Sequence[float]] = None,
+    min_accuracy: Optional[float] = None,
+    exit_layer_indices: Optional[Sequence[int]] = None,
+    arrival_rate_hz: Optional[float] = None,
+    exit_stats: Optional[Sequence] = None,
+):
+    """Re-select (deployed exit, effective p_tar) under CURRENT conditions.
+
+    Edgent-style adaptation: the plan's fitted per-exit calibrators are
+    re-used as-is (no re-fitting); only the offload probability and the
+    expected-latency objective are re-evaluated at the measured
+    `uplink_bps`. With `labels` and `final_logits`, each candidate's
+    end-to-end accuracy (on-device samples by the exit head, offloaded
+    samples by the cloud main head) is computed and candidates below
+    `min_accuracy` are rejected; if none qualify, the most accurate
+    candidate wins regardless of latency.
+
+    `arrival_rate_hz` (fleet-wide, for a SHARED uplink) adds an M/M/1-style
+    busy-ratio correction: a candidate whose offloads would load the link
+    at utilization rho sees its comm term scaled by 1/(1-rho), capped at
+    100x past saturation -- without it, the open-loop objective happily
+    picks configurations whose offload traffic exceeds link capacity.
+
+    `exit_stats` skips the calibrate+softmax pass: a list of per-exit
+    (confidence, prediction) arrays already computed with this plan's
+    calibrators (they don't change between re-scores, so a periodic
+    controller computes them once and passes them every tick).
+
+    Returns (new_plan, table): new_plan carries the winning exit_index and
+    p_tar; table lists every candidate as a dict, best first.
+    """
+    import numpy as np
+
+    from repro.core.exits import gate_statistics
+    from repro.core.partition import expected_latency
+
+    if plan.criterion != "confidence":
+        raise ValueError(
+            "rescore_plan moves the confidence target p_tar; an "
+            f"{plan.criterion!r}-criterion plan has nothing to re-score"
+        )
+    if min_accuracy is not None and (labels is None or final_logits is None):
+        raise ValueError(
+            "min_accuracy needs labels and final_logits to evaluate "
+            "candidate accuracy"
+        )
+    grid = [plan.p_tar] if p_tar_grid is None else list(p_tar_grid)
+    y = None if labels is None else np.asarray(labels)
+    final_correct = None
+    if final_logits is not None and y is not None:
+        final_correct = np.argmax(np.asarray(final_logits), axis=-1) == y
+    table = []
+    for i, z in enumerate(exit_logits_list):
+        if exit_stats is not None:
+            conf, pred = exit_stats[i]
+        else:
+            conf, pred, _ = gate_statistics(plan.calibrated_logits(z, i))
+        conf, pred = np.asarray(conf), np.asarray(pred)
+        exit_correct = None if y is None else pred == y
+        for p in grid:
+            on = conf >= p
+            offload_prob = float((~on).mean())
+            comm = payload_bytes[i] * 8.0 / uplink_bps
+            utilization = (
+                arrival_rate_hz * offload_prob * comm
+                if arrival_rate_hz is not None
+                else 0.0
+            )
+            wait_factor = 1.0 / max(1.0 - utilization, 1e-2)
+            lat = expected_latency(
+                edge_times_s[i], cloud_times_s[i], payload_bytes[i],
+                offload_prob, uplink_bps, comm_wait_factor=wait_factor,
+            )
+            acc = None
+            if exit_correct is not None and final_correct is not None:
+                acc = float(np.where(on, exit_correct, final_correct).mean())
+            table.append(
+                dict(
+                    exit_index=i,
+                    p_tar=float(p),
+                    offload_prob=offload_prob,
+                    expected_latency_s=lat,
+                    uplink_utilization=utilization,
+                    accuracy=acc,
+                )
+            )
+    feasible = [
+        r for r in table
+        if min_accuracy is None
+        or (r["accuracy"] is not None and r["accuracy"] >= min_accuracy)
+    ]
+    if feasible:
+        best = min(feasible, key=lambda r: r["expected_latency_s"])
+    else:  # nothing meets the floor: degrade gracefully to most accurate
+        best = max(table, key=lambda r: (r["accuracy"] or 0.0))
+    table = sorted(table, key=lambda r: r["expected_latency_s"])
+    if exit_layer_indices is not None:
+        layer = exit_layer_indices[best["exit_index"]]
+    elif best["exit_index"] == plan.exit_index:
+        layer = plan.partition_layer
+    else:  # exit moved and we don't know its layer: don't keep a stale one
+        layer = None
+    new_plan = plan.with_partition(best["exit_index"], layer).with_p_tar(best["p_tar"])
+    return new_plan, table
 
 
 # ------------------------------------------------------- deprecation shims

@@ -3,9 +3,13 @@ calibrated early-exit gate fused into the step (the paper's technique as a
 first-class serving feature).
 
 serve_step returns, besides the final logits, per-exit (confidence,
-prediction) computed from temperature-scaled side-branch logits -- the
-runtime (repro.offload.engine) uses them to stop early / route between the
-edge and cloud partitions.
+prediction) computed from calibrated side-branch logits -- the runtime
+(repro.offload.engine) uses them to stop early / route between the edge
+and cloud partitions.
+
+Calibration comes from an `OffloadPlan` (one CalibratorState per exit --
+richer calibrators than a scalar temperature apply inside the jitted step)
+or, as a legacy shim, from a raw `temperatures` list.
 """
 from __future__ import annotations
 
@@ -14,17 +18,48 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.exits import gate_statistics
+from repro.core.policy import OffloadPlan
 from repro.models import registry
 
 
-def make_prefill_step(cfg: ModelConfig, temperatures=None):
-    temps = temperatures or [1.0] * len(cfg.exit_layers)
+def _make_exit_gater(cfg: ModelConfig, plan, temperatures):
+    """-> gates(per_exit_logits_list) -> [(conf, pred, entropy), ...].
+
+    Exactly one of plan/temperatures may be given; neither means T=1
+    everywhere (the uncalibrated baseline).
+    """
+    n_exits = len(cfg.exit_layers)
+    if plan is not None:
+        if temperatures is not None:
+            raise ValueError("pass plan OR temperatures, not both")
+        if plan.num_exits != n_exits:
+            raise ValueError(
+                f"plan covers {plan.num_exits} exit(s) but {cfg.name} "
+                f"has {n_exits}"
+            )
+
+        def gates(logits_list):
+            return [
+                gate_statistics(plan.calibrated_logits(l, i))
+                for i, l in enumerate(logits_list)
+            ]
+
+        return gates
+    temps = temperatures or [1.0] * n_exits
+
+    def gates(logits_list):
+        return [gate_statistics(l, t) for l, t in zip(logits_list, temps)]
+
+    return gates
+
+
+def make_prefill_step(cfg: ModelConfig, plan: OffloadPlan = None,
+                      temperatures=None):
+    gater = _make_exit_gater(cfg, plan, temperatures)
 
     def prefill_step(params, batch):
         out = registry.forward_prefill(params, cfg, batch)
-        gates = [
-            gate_statistics(l[:, 0, :], t) for l, t in zip(out["exit_logits"], temps)
-        ]
+        gates = gater([l[:, 0, :] for l in out["exit_logits"]])
         return {
             "logits": out["logits"],
             "exit_confidence": jnp.stack([g[0] for g in gates], 0) if gates else jnp.zeros((0, batch["tokens"].shape[0])),
@@ -35,18 +70,17 @@ def make_prefill_step(cfg: ModelConfig, temperatures=None):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig, temperatures=None):
+def make_serve_step(cfg: ModelConfig, plan: OffloadPlan = None,
+                    temperatures=None):
     """One decode token + fused exit gates. (params, token, caches, pos) ->
     ({token, logits, exit_confidence, exit_prediction}, new_caches)."""
-    temps = temperatures or [1.0] * len(cfg.exit_layers)
+    gater = _make_exit_gater(cfg, plan, temperatures)
 
     def serve_step(params, token, caches, pos):
         out, new_caches = registry.decode_step(params, cfg, token, caches, pos)
         logits = out["logits"][:, 0, :]
         b = token.shape[0]
-        gates = [
-            gate_statistics(l[:, 0, :], t) for l, t in zip(out["exit_logits"], temps)
-        ]
+        gates = gater([l[:, 0, :] for l in out["exit_logits"]])
         next_token = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
         return (
             {

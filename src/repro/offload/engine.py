@@ -18,6 +18,7 @@ LM families (per-sequence classification at prefill).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
@@ -33,6 +34,10 @@ class EngineStats:
     on_device: int = 0
     offloaded: int = 0
     payload_bytes: int = 0
+    edge_calls: int = 0
+    cloud_calls: int = 0
+    edge_time_s: float = 0.0  # wall-clock in edge_fn (blocked on device)
+    cloud_time_s: float = 0.0  # wall-clock in cloud_fn
 
     @property
     def offload_rate(self):
@@ -49,6 +54,13 @@ class OffloadEngine:
     partition actually computes; defaults to plan.exit_index. use_kernel
     routes gating through the fused Pallas exit-gate kernel when the
     branch's calibration is pure temperature scaling.
+
+    The engine is the per-batch compute core of the serving layer: the
+    event-driven runtime (repro.serving.runtime) calls `edge_step` and
+    `cloud_step` separately so queueing and transfer sit between them on
+    the simulated clock. Both steps block until the device is done and
+    accumulate wall-clock in EngineStats; `timing_hook(tier, seconds,
+    batch_size)` observes every call (tier is "edge" or "cloud").
     """
 
     def __init__(
@@ -59,6 +71,7 @@ class OffloadEngine:
         payload_nbytes: Optional[Callable[[Any], int]] = None,
         branch: Optional[int] = None,
         use_kernel: bool = False,
+        timing_hook: Optional[Callable[[str, float, int], None]] = None,
     ):
         self.edge_fn = edge_fn
         self.cloud_fn = cloud_fn
@@ -73,14 +86,40 @@ class OffloadEngine:
         self.payload_nbytes = payload_nbytes or (
             lambda p: sum(x.nbytes for x in jax.tree.leaves(p))
         )
+        self.timing_hook = timing_hook
         self.stats = EngineStats()
 
     @property
     def policy(self) -> OffloadPlan:  # legacy name
         return self.plan
 
+    # ------------------------------------------------------- timed steps
+    def edge_step(self, batch) -> Dict[str, Any]:
+        """Run the edge partition on one request batch (timed, blocking)."""
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self.edge_fn(batch))
+        dt = time.perf_counter() - t0
+        b = int(out["exit_logits"].shape[0])
+        self.stats.edge_calls += 1
+        self.stats.edge_time_s += dt
+        if self.timing_hook is not None:
+            self.timing_hook("edge", dt, b)
+        return out
+
+    def cloud_step(self, payload) -> Dict[str, Any]:
+        """Run the cloud partition on a refused-sample payload (timed)."""
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self.cloud_fn(payload))
+        dt = time.perf_counter() - t0
+        m = int(out["logits"].shape[0])
+        self.stats.cloud_calls += 1
+        self.stats.cloud_time_s += dt
+        if self.timing_hook is not None:
+            self.timing_hook("cloud", dt, m)
+        return out
+
     def infer(self, batch) -> Dict[str, np.ndarray]:
-        edge_out = self.edge_fn(batch)
+        edge_out = self.edge_step(batch)
         exit_logits = edge_out["exit_logits"]
         gate = self.plan.gate(exit_logits, branch=self.branch,
                               use_kernel=self.use_kernel)
@@ -97,7 +136,7 @@ class OffloadEngine:
             payload = jax.tree.map(lambda x: x[idx], edge_out["payload"])
             self.stats.offloaded += len(idx)
             self.stats.payload_bytes += self.payload_nbytes(payload)
-            cloud_out = self.cloud_fn(payload)
+            cloud_out = self.cloud_step(payload)
             cloud_logits = np.asarray(cloud_out["logits"])
             pred[idx] = np.argmax(cloud_logits, axis=-1)
             z = cloud_logits - cloud_logits.max(-1, keepdims=True)

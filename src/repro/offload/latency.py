@@ -99,5 +99,17 @@ def cloud_time(profile: LatencyProfile, from_branch: int) -> float:
     return sum(profile.cloud_layer_s[l] for l in CLOUD_LAYERS_BY_BRANCH[from_branch])
 
 
-def comm_time(profile: LatencyProfile, from_branch: int) -> float:
-    return payload_bytes(from_branch) * 8.0 / profile.uplink_bps
+def comm_time(
+    profile: LatencyProfile, from_branch: int, network=None, t: float = 0.0
+) -> float:
+    """Per-sample uplink time for branch `from_branch`'s activation.
+
+    With `network` (a `repro.serving.network.NetworkModel`) the transfer is
+    priced at the link's instantaneous rate at time `t`; the default is the
+    profile's fixed uplink -- the paper's 18.8 Mbps constant, numerically
+    unchanged.
+    """
+    nbytes = payload_bytes(from_branch)
+    if network is None:
+        return nbytes * 8.0 / profile.uplink_bps
+    return network.comm_time(nbytes, t)

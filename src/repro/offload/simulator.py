@@ -39,6 +39,9 @@ def simulate_batches(
     batch_size: int = 512,
     branches: Sequence[int] = (1,),
     plan=None,
+    drop_last: bool = False,
+    network=None,
+    batch_times_s: Sequence[float] = None,
 ) -> List[BatchOutcome]:
     """branches: which physical branches are deployed, e.g. (1,) or (1, 2).
     exit_logits_list and the legacy `temperatures` run parallel to
@@ -48,6 +51,12 @@ def simulate_batches(
     are per-exit, shallowest first: physical branch k gates with
     calibrator state k-1, matching OffloadEngine) or from the legacy
     `temperatures` list with an explicit `p_tar`.
+
+    The final partial batch IS simulated (set drop_last=True for the old
+    truncating behavior). `network` (a serving.network.NetworkModel) prices
+    each batch's uplink transfer at the rate in effect at that batch's
+    timestamp in `batch_times_s` (default: all at t=0); without it the
+    profile's fixed uplink is used, numerically unchanged.
     """
     if profile is None:
         raise ValueError("simulate_batches needs a LatencyProfile")
@@ -87,17 +96,25 @@ def simulate_batches(
     cloud = serve == -1
     deepest = branches[-1]
     t_edge_all = sum(L.edge_time(profile, b) for b in branches)
-    t[cloud] = (
-        t_edge_all + L.comm_time(profile, deepest) + L.cloud_time(profile, deepest)
-    )
+    # comm is added per batch below so a time-varying network can reprice it
+    t[cloud] = t_edge_all + L.cloud_time(profile, deepest)
     correct[cloud] = final_pred[cloud] == labels[cloud]
 
     out = []
-    for s in range(0, n - batch_size + 1, batch_size):
-        sl = slice(s, s + batch_size)
+    stop = n - batch_size + 1 if drop_last else n
+    n_batches = len(range(0, stop, batch_size))
+    if batch_times_s is not None and len(batch_times_s) < n_batches:
+        raise ValueError(
+            f"batch_times_s has {len(batch_times_s)} entries but "
+            f"{n_batches} batches will run (drop_last={drop_last})"
+        )
+    for k, s in enumerate(range(0, stop, batch_size)):
+        sl = slice(s, min(s + batch_size, n))
+        t_b = 0.0 if batch_times_s is None else batch_times_s[k]
+        comm = L.comm_time(profile, deepest, network=network, t=t_b)
         out.append(
             BatchOutcome(
-                time_s=float(t[sl].mean()),
+                time_s=float((t[sl] + comm * cloud[sl]).mean()),
                 accuracy=float(correct[sl].mean()),
                 on_device_frac=float((serve[sl] >= 0).mean()),
             )

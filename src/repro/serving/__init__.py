@@ -1,0 +1,62 @@
+"""Event-driven edge-cloud serving layer.
+
+The paper prices offloading at one fixed 18.8 Mbps uplink and reports mean
+batch latency; this package turns the reproduction into a load-testable
+serving system:
+
+* `network`   -- stochastic / time-varying uplink models behind a single
+                 ``comm_time(nbytes, t)`` interface (fixed-rate, Markov
+                 good/bad Wi-Fi, bandwidth-trace replay);
+* `workload`  -- seeded Poisson / constant-rate / trace request generators;
+* `telemetry` -- per-request bookkeeping (p50/p95/p99 latency, deadline
+                 misses, queue depth, offload rate) plus the windowed
+                 bandwidth/queue estimates the controller consumes;
+* `runtime`   -- the discrete-event simulator: N edge devices, a shared
+                 uplink, a cloud tier, and a microbatcher that coalesces
+                 refused samples into cloud batches;
+* `controller`-- an Edgent-style online controller that re-selects the
+                 deployed branch and effective p_tar by re-scoring the
+                 OffloadPlan's fitted calibrators under measured bandwidth
+                 (no re-fitting).
+"""
+from repro.serving.controller import ControllerConfig, OnlineController
+from repro.serving.network import (
+    FixedRateNetwork,
+    MarkovNetwork,
+    NetworkModel,
+    TraceNetwork,
+    network_for,
+)
+from repro.serving.runtime import (
+    EngineCore,
+    LogitsCore,
+    RuntimeConfig,
+    ServingRuntime,
+)
+from repro.serving.telemetry import RequestRecord, Telemetry
+from repro.serving.workload import (
+    Request,
+    constant_workload,
+    poisson_workload,
+    trace_workload,
+)
+
+__all__ = [
+    "ControllerConfig",
+    "OnlineController",
+    "NetworkModel",
+    "FixedRateNetwork",
+    "MarkovNetwork",
+    "TraceNetwork",
+    "network_for",
+    "RuntimeConfig",
+    "ServingRuntime",
+    "LogitsCore",
+    "EngineCore",
+    "Telemetry",
+    "RequestRecord",
+    "Request",
+    "poisson_workload",
+    "constant_workload",
+    "trace_workload",
+]

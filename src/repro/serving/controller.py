@@ -1,0 +1,151 @@
+"""Online offload controller (Edgent-style, 1806.07840).
+
+Every `interval_s` of simulated time the controller looks at a trailing
+window of telemetry -- the mean uplink rate observed by actual transfers
+and the mean queue depth -- and re-scores the deployed `OffloadPlan` with
+`repro.core.policy.rescore_plan`: the plan's fitted per-exit calibrators
+are applied to held-out validation logits (no re-fitting), each candidate
+(branch, effective p_tar) is priced with the Neurosurgeon expected-latency
+objective at the MEASURED bandwidth, and the cheapest candidate that still
+meets the accuracy floor wins. Queue pressure scales the effective edge
+service time (each queued request adds one service quantum of wait), so a
+backed-up fleet biases toward configurations that offload less.
+
+The controller owns no queues and no clock: `ServingRuntime` calls
+`update(t, telemetry)` and applies the returned plan's (exit_index, p_tar).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.policy import OffloadPlan, rescore_plan
+from repro.offload import latency as L
+
+
+@dataclass
+class ControllerConfig:
+    interval_s: float = 1.0  # re-score cadence (simulated seconds)
+    window_s: float = 2.0  # trailing telemetry window
+    p_tar_grid: Optional[Sequence[float]] = None  # None = keep the plan's
+    min_accuracy: Optional[float] = None  # accuracy floor for candidates
+    hysteresis: float = 0.05  # min relative latency gain to switch
+    queue_aware: bool = True  # inflate edge time by observed queue depth
+    utilization_aware: bool = True  # M/M/1 uplink correction from arrivals
+
+
+class OnlineController:
+    """Re-selects (deployed branch, effective p_tar) from telemetry.
+
+    exit_logits: {physical_branch: (N, C) held-out validation logits},
+    the same convention as `LogitsCore`. `labels`/`final_logits` enable the
+    accuracy floor; without them candidates are ranked by latency alone.
+    """
+
+    def __init__(
+        self,
+        plan: OffloadPlan,
+        profile: L.LatencyProfile,
+        exit_logits: Dict[int, np.ndarray],
+        final_logits: Optional[np.ndarray] = None,
+        labels: Optional[np.ndarray] = None,
+        config: Optional[ControllerConfig] = None,
+        payload_nbytes=None,
+    ):
+        if plan.criterion != "confidence":
+            raise ValueError(
+                "OnlineController re-scores the confidence target p_tar; "
+                f"{plan.criterion!r}-criterion plans are not re-scorable"
+            )
+        self.plan = plan
+        self.profile = profile
+        self.config = config or ControllerConfig()
+        self.branches = sorted(exit_logits)
+        if self.branches != list(range(1, len(self.branches) + 1)):
+            raise ValueError(
+                "exit_logits keys must be contiguous physical branches 1..K "
+                "(branch k gates with plan.calibrators[k-1]); got "
+                f"{self.branches}"
+            )
+        self.exit_logits_list = [exit_logits[b] for b in self.branches]
+        self.final_logits = final_logits
+        self.labels = labels
+        if payload_nbytes is None:
+            from repro.models.convnet import payload_bytes
+
+            payload_nbytes = payload_bytes
+        # calibrated (conf, pred) never change between ticks: compute once
+        from repro.core.exits import gate_statistics
+
+        self._exit_stats = []
+        for i, z in enumerate(self.exit_logits_list):
+            conf, pred, _ = gate_statistics(plan.calibrated_logits(z, i))
+            self._exit_stats.append((np.asarray(conf), np.asarray(pred)))
+        self.edge_times_s = [L.edge_time(profile, b) for b in self.branches]
+        self.cloud_times_s = [L.cloud_time(profile, b) for b in self.branches]
+        self.payload_bytes = [payload_nbytes(b) for b in self.branches]
+        self.history: List[Tuple[float, float, int, float]] = []  # (t, bw, branch, p_tar)
+
+    @property
+    def interval_s(self) -> float:
+        return self.config.interval_s
+
+    def update(self, t: float, telemetry) -> OffloadPlan:
+        cfg = self.config
+        bw = telemetry.bandwidth_estimate(cfg.window_s, now=t)
+        if bw is None:
+            bw = self.profile.uplink_bps  # nothing measured yet: trust nominal
+        edge_times = self.edge_times_s
+        if cfg.queue_aware:
+            depth = telemetry.queue_estimate(cfg.window_s, now=t)
+            if depth is not None and depth > 0:
+                edge_times = [e * (1.0 + depth) for e in edge_times]
+        rate_hz = None
+        if cfg.utilization_aware:
+            rate_hz = telemetry.arrival_rate_estimate(cfg.window_s, now=t)
+
+        # candidate table under measured conditions (calibrators re-used)
+        candidate, table = rescore_plan(
+            self.plan,
+            self.exit_logits_list,
+            edge_times_s=edge_times,
+            cloud_times_s=self.cloud_times_s,
+            payload_bytes=self.payload_bytes,
+            uplink_bps=bw,
+            labels=self.labels,
+            final_logits=self.final_logits,
+            p_tar_grid=cfg.p_tar_grid,
+            min_accuracy=cfg.min_accuracy,
+            arrival_rate_hz=rate_hz,
+            exit_stats=self._exit_stats,
+        )
+        # hysteresis: keep the incumbent unless the ADOPTED candidate (the
+        # accuracy-feasible winner, not the global latency minimum) is
+        # clearly better -- but never retain an incumbent that itself
+        # violates the accuracy floor
+        def row_for(p):
+            return next(
+                (
+                    r for r in table
+                    if r["exit_index"] == p.exit_index and r["p_tar"] == p.p_tar
+                ),
+                None,
+            )
+
+        cur, new = row_for(self.plan), row_for(candidate)
+        cur_feasible = cur is not None and (
+            cfg.min_accuracy is None
+            or (cur["accuracy"] is not None and cur["accuracy"] >= cfg.min_accuracy)
+        )
+        if (
+            cur_feasible
+            and new is not None
+            and new["expected_latency_s"]
+            > (1.0 - cfg.hysteresis) * cur["expected_latency_s"]
+        ):
+            candidate = self.plan  # not worth churning the fleet
+        self.plan = candidate
+        self.history.append((t, bw, candidate.exit_index + 1, candidate.p_tar))
+        return candidate

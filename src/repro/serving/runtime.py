@@ -1,0 +1,386 @@
+"""Discrete-event edge-cloud serving runtime.
+
+Models the paper's two-tier system under load instead of in the mean:
+
+    N edge devices (FIFO, one request in service at a time)
+        -> calibrated gate (the deployed OffloadPlan, current branch/p_tar)
+        -> microbatcher (coalesces refused samples into cloud batches)
+        -> ONE shared uplink (NetworkModel prices each transfer at the
+           instantaneous rate when it starts)
+        -> cloud tier (`cloud_servers` parallel servers, per-sample serial
+           service within a batch)
+
+Event list is a heap of (time, seq, fn); all randomness lives in the
+workload and network models, so a run is bit-reproducible. Service times
+come from a `LatencyProfile` via `offload.latency.edge_time`/`cloud_time`,
+which makes the empty-queue single-device fixed-network special case agree
+with the paper's closed-form per-sample numbers to float round-off.
+
+Compute cores decouple the queueing model from the math that decides the
+gate: `LogitsCore` serves precomputed per-branch logits (fast, exact,
+drives tests/benchmarks); `EngineCore` drives a real `OffloadEngine` pair
+of jitted partitions per request batch, reusing its timing hooks.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.exits import gate_statistics
+from repro.core.policy import OffloadPlan
+from repro.offload import latency as L
+from repro.serving.network import NetworkModel, network_for
+from repro.serving.telemetry import RequestRecord, Telemetry
+from repro.serving.workload import Request
+
+
+# ------------------------------------------------------------ compute cores
+class LogitsCore:
+    """Gate/cloud decisions from precomputed logits.
+
+    exit_logits: {physical_branch: (N, C) array} -- e.g. {1: z1, 2: z2};
+    physical branch k gates with plan.calibrators[k-1] (engine convention).
+    Confidence/prediction/entropy per branch are precomputed once; only the
+    mask depends on the runtime's current p_tar, so branch/target switches
+    by the controller are free. Both of the plan's criteria are honored:
+    'confidence' gates on conf >= p_tar (the runtime's moving target),
+    'entropy' on the plan's fixed entropy_threshold.
+    """
+
+    def __init__(
+        self,
+        exit_logits: Dict[int, np.ndarray],
+        final_logits: np.ndarray,
+        plan: OffloadPlan,
+        labels: Optional[np.ndarray] = None,
+    ):
+        if plan.criterion == "entropy" and plan.entropy_threshold is None:
+            raise ValueError("entropy criterion needs plan.entropy_threshold")
+        self.criterion = plan.criterion
+        self.entropy_threshold = plan.entropy_threshold
+        self.branches = sorted(exit_logits)
+        self.conf: Dict[int, np.ndarray] = {}
+        self.pred: Dict[int, np.ndarray] = {}
+        self.ent: Dict[int, np.ndarray] = {}
+        for b in self.branches:
+            c, p, e = gate_statistics(plan.calibrated_logits(exit_logits[b], b - 1))
+            self.conf[b] = np.asarray(c, np.float64)
+            self.pred[b] = np.asarray(p)
+            self.ent[b] = np.asarray(e, np.float64)
+        self.final_pred = np.argmax(np.asarray(final_logits), axis=-1)
+        self.labels = None if labels is None else np.asarray(labels)
+        self.n_samples = int(self.final_pred.shape[0])
+
+    def gate(self, sample: int, branch: int, p_tar: float):
+        """-> (on_device, prediction, confidence) for one sample."""
+        conf = self.conf[branch][sample]
+        if self.criterion == "entropy":
+            on_device = bool(self.ent[branch][sample] <= self.entropy_threshold)
+        else:
+            on_device = bool(conf >= p_tar)
+        return on_device, int(self.pred[branch][sample]), float(conf)
+
+    def cloud_predict(self, sample: int, branch: int) -> int:
+        # every cloud path computes the same main head, whichever branch
+        # the split happened at
+        return int(self.final_pred[sample])
+
+    def correct(self, sample: int, prediction: int) -> Optional[bool]:
+        if self.labels is None:
+            return None
+        return bool(prediction == self.labels[sample])
+
+
+class EngineCore:
+    """Gate/cloud decisions computed live by OffloadEngine partitions.
+
+    engines: {physical_branch: OffloadEngine} (one per deployable branch;
+    a single-entry dict serves the paper's fixed-branch case). `data` is
+    the batch pytree of the full dataset; requests index into its leading
+    axis. Uses the engines' edge_step/cloud_step so their timing hooks and
+    EngineStats keep working under the simulated clock.
+    """
+
+    def __init__(
+        self,
+        engines: Dict[int, "OffloadEngine"],  # noqa: F821
+        data: Dict[str, np.ndarray],
+        labels: Optional[np.ndarray] = None,
+    ):
+        import jax
+
+        self._jax = jax
+        self.engines = engines
+        self.branches = sorted(engines)
+        self.data = data
+        self.labels = None if labels is None else np.asarray(labels)
+        leaves = jax.tree.leaves(data)
+        self.n_samples = int(leaves[0].shape[0])
+        # (sample, branch) -> edge activation. Keyed by branch so a repeat
+        # of the same sample after a controller branch switch cannot hand
+        # an in-flight cloud batch the other partition's payload; kept (not
+        # popped) because the payload is deterministic per key, bounding
+        # the cache at n_samples * n_branches entries.
+        self._payload: Dict[tuple, object] = {}
+
+    def gate(self, sample: int, branch: int, p_tar: float):
+        eng = self.engines[branch]
+        batch = self._jax.tree.map(lambda x: x[sample : sample + 1], self.data)
+        edge_out = eng.edge_step(batch)
+        gate = eng.plan.gate(edge_out["exit_logits"], branch=eng.branch,
+                             use_kernel=eng.use_kernel)
+        conf = float(np.asarray(gate.confidence)[0])
+        pred = int(np.asarray(gate.prediction)[0])
+        on_device = bool(conf >= p_tar) if eng.plan.criterion == "confidence" \
+            else bool(np.asarray(gate.exit_mask)[0])
+        if not on_device:
+            self._payload[(sample, branch)] = edge_out["payload"]
+        return on_device, pred, conf
+
+    def cloud_predict(self, sample: int, branch: int) -> int:
+        payload = self._payload[(sample, branch)]
+        out = self.engines[branch].cloud_step(payload)
+        return int(np.argmax(np.asarray(out["logits"]), axis=-1)[0])
+
+    def correct(self, sample: int, prediction: int) -> Optional[bool]:
+        if self.labels is None:
+            return None
+        return bool(prediction == self.labels[sample])
+
+
+# ------------------------------------------------------------------ runtime
+@dataclass
+class RuntimeConfig:
+    n_devices: int = 1
+    max_batch: int = 1  # microbatcher: flush at this many refused samples
+    batch_window_s: float = 0.0  # ... or when the oldest has waited this long
+    cloud_servers: int = 1
+
+
+@dataclass
+class _Pending:
+    """A refused request waiting in the microbatcher / cloud pipeline."""
+
+    request: Request
+    branch: int
+    p_tar: float
+    confidence: float
+    edge_start_s: float
+    edge_done_s: float
+    payload_nbytes: int
+
+
+class ServingRuntime:
+    """Run a workload through the two-tier system; returns `Telemetry`.
+
+    The deployed configuration starts at the plan's (exit_index+1, p_tar)
+    and is updated in place whenever the optional `controller` re-scores
+    the plan at its tick interval. A branch switch flushes the pending
+    microbatch so every cloud batch is gated under one configuration.
+    """
+
+    def __init__(
+        self,
+        core,
+        profile: L.LatencyProfile,
+        plan: OffloadPlan,
+        requests: Sequence[Request],
+        network: Optional[NetworkModel] = None,
+        config: RuntimeConfig = None,
+        controller=None,
+        telemetry: Optional[Telemetry] = None,
+        payload_nbytes: Optional[Callable[[int], int]] = None,
+    ):
+        self.core = core
+        self.profile = profile
+        self.plan = plan
+        self.requests = sorted(requests, key=lambda r: r.arrival_s)
+        self.network = network or network_for(profile)
+        self.config = config or RuntimeConfig()
+        self.controller = controller
+        self.telemetry = telemetry or Telemetry()
+        if payload_nbytes is None:
+            from repro.models.convnet import payload_bytes  # the paper's model
+
+            payload_nbytes = payload_bytes
+        self.payload_nbytes = payload_nbytes
+
+        self.branch = plan.exit_index + 1
+        self.p_tar = float(plan.p_tar)
+        if self.branch not in core.branches:
+            raise ValueError(
+                f"plan deploys branch {self.branch} but the core only "
+                f"serves branches {core.branches}"
+            )
+        if controller is not None and not set(controller.branches) <= set(
+            core.branches
+        ):
+            raise ValueError(
+                f"controller may deploy branches {controller.branches} but "
+                f"the core only serves {core.branches}"
+            )
+
+        # event machinery
+        self._heap: List = []
+        self._seq = 0
+        self._now = 0.0
+        # device state
+        n = self.config.n_devices
+        self._dev_queue: List[List[Request]] = [[] for _ in range(n)]
+        self._dev_busy = [False] * n
+        # microbatcher / uplink / cloud state
+        self._batch: List[_Pending] = []
+        self._batch_epoch = 0  # invalidates stale window-flush timers
+        self._uplink_free_s = 0.0
+        self._cloud_free_s = [0.0] * self.config.cloud_servers
+
+    # -------------------------------------------------------------- events
+    def _push(self, t: float, fn: Callable, *args) -> None:
+        heapq.heappush(self._heap, (t, self._seq, fn, args))
+        self._seq += 1
+
+    def run(self) -> Telemetry:
+        for req in self.requests:
+            self._push(req.arrival_s, self._on_arrival, req)
+        if self.controller is not None and self.requests:
+            # first tick only; each tick re-schedules the next while the
+            # simulation still has events, so adaptation continues through
+            # the drain phase after the last arrival
+            self._push(self.controller.interval_s, self._on_controller_tick)
+        while self._heap:
+            t, _, fn, args = heapq.heappop(self._heap)
+            self._now = t
+            fn(t, *args)
+        self._flush_batch(self._now)  # drain stragglers (window=0, partial batch)
+        while self._heap:
+            t, _, fn, args = heapq.heappop(self._heap)
+            self._now = t
+            fn(t, *args)
+        return self.telemetry
+
+    # ---------------------------------------------------------- edge tier
+    def _on_arrival(self, t: float, req: Request) -> None:
+        d = req.device % self.config.n_devices
+        self.telemetry.observe_arrival(t)
+        self._dev_queue[d].append(req)
+        # mean PER-DEVICE edge backlog (batcher excluded): this is what the
+        # controller multiplies edge service time by, so a 4-device fleet
+        # must not look 4x more backed up than each device actually is
+        self.telemetry.observe_queue(
+            t, sum(len(q) for q in self._dev_queue) / self.config.n_devices
+        )
+        if not self._dev_busy[d]:
+            self._start_edge(t, d)
+
+    def _start_edge(self, t: float, d: int) -> None:
+        req = self._dev_queue[d].pop(0)
+        self._dev_busy[d] = True
+        # capture the WHOLE configuration now: a controller tick during the
+        # service must not pair this branch's logits with a p_tar tuned for
+        # another branch
+        branch, p_tar = self.branch, self.p_tar
+        service = L.edge_time(self.profile, branch)
+        self._push(t + service, self._on_edge_done, req, d, t, branch, p_tar)
+
+    def _on_edge_done(
+        self, t: float, req: Request, d: int, start_s: float, branch: int,
+        p_tar: float,
+    ) -> None:
+        on_device, pred, conf = self.core.gate(req.sample, branch, p_tar)
+        if on_device:
+            self.telemetry.add(
+                RequestRecord(
+                    req_id=req.req_id,
+                    arrival_s=req.arrival_s,
+                    device=d,
+                    branch=branch,
+                    p_tar=p_tar,
+                    on_device=True,
+                    edge_start_s=start_s,
+                    edge_done_s=t,
+                    complete_s=t,
+                    correct=self.core.correct(req.sample, pred),
+                    deadline_s=req.deadline_s,
+                )
+            )
+        else:
+            self._batch.append(
+                _Pending(req, branch, p_tar, conf, start_s, t,
+                         self.payload_nbytes(branch))
+            )
+            if len(self._batch) >= self.config.max_batch:
+                self._flush_batch(t)
+            elif len(self._batch) == 1 and self.config.batch_window_s > 0:
+                self._push(
+                    t + self.config.batch_window_s,
+                    self._on_batch_window,
+                    self._batch_epoch,
+                )
+        self._dev_busy[d] = False
+        if self._dev_queue[d]:
+            self._start_edge(t, d)
+
+    # ------------------------------------------------- microbatch + uplink
+    def _on_batch_window(self, t: float, epoch: int) -> None:
+        if epoch == self._batch_epoch and self._batch:
+            self._flush_batch(t)
+
+    def _flush_batch(self, t: float) -> None:
+        if not self._batch:
+            return
+        batch, self._batch = self._batch, []
+        self._batch_epoch += 1
+        nbytes = sum(p.payload_nbytes for p in batch)
+        start = max(t, self._uplink_free_s)
+        # observation timestamped NOW (flush time), not at the transfer's
+        # start: under backlog `start` lies in the future and a sample
+        # there would fall outside the controller's trailing window
+        # exactly when it matters most
+        self.telemetry.observe_bandwidth(t, self.network.rate_bps(start))
+        done = start + self.network.comm_time(nbytes, start)
+        self._uplink_free_s = done
+        self._push(done, self._on_uplink_done, batch)
+
+    # ----------------------------------------------------------- cloud tier
+    def _on_uplink_done(self, t: float, batch: List[_Pending]) -> None:
+        i = int(np.argmin(self._cloud_free_s))
+        start = max(t, self._cloud_free_s[i])
+        service = sum(L.cloud_time(self.profile, p.branch) for p in batch)
+        done = start + service
+        self._cloud_free_s[i] = done
+        self._push(done, self._on_cloud_done, batch)
+
+    def _on_cloud_done(self, t: float, batch: List[_Pending]) -> None:
+        for p in batch:
+            pred = self.core.cloud_predict(p.request.sample, p.branch)
+            self.telemetry.add(
+                RequestRecord(
+                    req_id=p.request.req_id,
+                    arrival_s=p.request.arrival_s,
+                    device=p.request.device % self.config.n_devices,
+                    branch=p.branch,
+                    p_tar=p.p_tar,
+                    on_device=False,
+                    edge_start_s=p.edge_start_s,
+                    edge_done_s=p.edge_done_s,
+                    complete_s=t,
+                    correct=self.core.correct(p.request.sample, pred),
+                    deadline_s=p.request.deadline_s,
+                )
+            )
+
+    # ----------------------------------------------------------- controller
+    def _on_controller_tick(self, t: float) -> None:
+        new_plan = self.controller.update(t, self.telemetry)
+        new_branch = new_plan.exit_index + 1  # validated against the core at init
+        new_p_tar = float(new_plan.p_tar)
+        if new_branch != self.branch:
+            self._flush_batch(t)  # pending batch was gated under the old config
+        if new_branch != self.branch or new_p_tar != self.p_tar:
+            self.telemetry.record_controller(t, new_branch, new_p_tar)
+        self.branch, self.p_tar = new_branch, new_p_tar
+        if self._heap:  # more simulation ahead (requests in flight/queued)
+            self._push(t + self.controller.interval_s, self._on_controller_tick)

@@ -1,0 +1,84 @@
+"""Reference serving scenarios shared by the acceptance tests and the
+benchmark suite, so the scenario CI asserts on and the scenario the tests
+pin down cannot silently drift apart.
+
+`synthetic_cascade_logits` is a deterministic stand-in for a trained
+two-exit B-AlexNet's logits: branch 1 moderately confident, branch 2
+strictly more confident on the same samples, and a near-oracle cloud main
+head. `run_congested_markov` is the acceptance scenario from ISSUE 2: a
+Poisson fleet against a mostly-bad Markov Wi-Fi link, served either by the
+static plan or with the online controller re-scoring it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policy import OffloadPlan
+from repro.offload import latency as L
+from repro.serving.controller import ControllerConfig, OnlineController
+from repro.serving.network import MarkovNetwork
+from repro.serving.runtime import LogitsCore, RuntimeConfig, ServingRuntime
+from repro.serving.telemetry import Telemetry
+from repro.serving.workload import poisson_workload
+
+
+def synthetic_cascade_logits(
+    n: int = 512, c: int = 10, seed: int = 0
+) -> Tuple[Dict[int, np.ndarray], np.ndarray, np.ndarray]:
+    """-> ({1: z1, 2: z2}, final_logits, labels)."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, c, n)
+    z1 = (rng.normal(size=(n, c)) * 2).astype(np.float32)
+    z1[np.arange(n), y] += 3.0
+    z2 = z1.copy()
+    z2[np.arange(n), y] += 2.0
+    final = np.zeros((n, c), np.float32)
+    final[np.arange(n), y] = 9.0
+    return {1: z1, 2: z2}, final, y
+
+
+def congested_markov_network(
+    good_bps: float = 18.8e6, bad_bps: float = 1.5e6
+) -> MarkovNetwork:
+    """The paper's nominal link that spends most of its time degraded."""
+    return MarkovNetwork(
+        good_bps=good_bps, bad_bps=bad_bps,
+        p_good_to_bad=0.5, p_bad_to_good=0.1,
+        dwell_s=1.0, seed=1, start_state=1,
+    )
+
+
+def run_congested_markov(
+    plan: OffloadPlan,
+    exit_logits: Dict[int, np.ndarray],
+    final_logits: np.ndarray,
+    labels: np.ndarray,
+    n_requests: int = 800,
+    arrival_rate_hz: float = 80.0,
+    deadline_s: float = 0.1,
+    with_controller: bool = False,
+    controller_config: Optional[ControllerConfig] = None,
+    profile: Optional[L.LatencyProfile] = None,
+) -> Telemetry:
+    profile = profile or L.paper_2020()
+    core = LogitsCore(exit_logits, final_logits, plan, labels=labels)
+    reqs = poisson_workload(
+        arrival_rate_hz, n_requests, len(labels), deadline_s=deadline_s, seed=2
+    )
+    controller = None
+    if with_controller:
+        controller = OnlineController(
+            plan, profile, exit_logits, final_logits=final_logits,
+            labels=labels,
+            config=controller_config
+            or ControllerConfig(interval_s=0.5, window_s=1.0, min_accuracy=0.9),
+        )
+    rt = ServingRuntime(
+        core, profile, plan, reqs,
+        network=congested_markov_network(),
+        config=RuntimeConfig(max_batch=4, batch_window_s=0.02),
+        controller=controller,
+    )
+    return rt.run()

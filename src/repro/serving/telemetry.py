@@ -1,0 +1,179 @@
+"""Per-request bookkeeping for the serving runtime.
+
+`Telemetry` collects one `RequestRecord` per served request plus timestamped
+observations of uplink bandwidth, queue depth, and controller decisions.
+It answers both the reporting questions (p50/p95/p99 latency, deadline-miss
+rate, offload rate, accuracy, throughput) and the control questions (what
+did the link/queues look like over the last window) -- the latter is what
+`OnlineController` consumes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class RequestRecord:
+    req_id: int
+    arrival_s: float
+    device: int
+    branch: int  # physical branch deployed when the request was gated
+    p_tar: float  # effective target in force when the request was gated
+    on_device: bool
+    edge_start_s: float
+    edge_done_s: float
+    complete_s: float
+    correct: Optional[bool] = None  # None when the core has no labels
+    deadline_s: Optional[float] = None
+
+    @property
+    def latency_s(self) -> float:
+        return self.complete_s - self.arrival_s
+
+    @property
+    def edge_wait_s(self) -> float:
+        """Time spent queued for the edge device (batching/uplink/cloud
+        contention show up in latency_s, not here)."""
+        return self.edge_start_s - self.arrival_s
+
+    @property
+    def missed_deadline(self) -> Optional[bool]:
+        if self.deadline_s is None:
+            return None
+        return self.latency_s > self.deadline_s
+
+
+class Telemetry:
+    def __init__(self):
+        self.records: List[RequestRecord] = []
+        self.arrival_times: List[float] = []
+        self.bandwidth_samples: List[Tuple[float, float]] = []  # (t, bps)
+        self.queue_samples: List[Tuple[float, float]] = []  # (t, mean per-device depth)
+        self.controller_events: List[Tuple[float, int, float]] = []  # (t, branch, p_tar)
+
+    # ------------------------------------------------------------ ingest
+    def add(self, record: RequestRecord) -> None:
+        self.records.append(record)
+
+    def observe_arrival(self, t: float) -> None:
+        self.arrival_times.append(t)
+
+    def observe_bandwidth(self, t: float, bps: float) -> None:
+        self.bandwidth_samples.append((t, bps))
+
+    def observe_queue(self, t: float, depth: int) -> None:
+        self.queue_samples.append((t, depth))
+
+    def record_controller(self, t: float, branch: int, p_tar: float) -> None:
+        self.controller_events.append((t, branch, p_tar))
+
+    # ----------------------------------------------------------- reports
+    def latencies(self) -> np.ndarray:
+        return np.asarray([r.latency_s for r in self.records], np.float64)
+
+    def percentile(self, q: float) -> float:
+        lat = self.latencies()
+        return float(np.percentile(lat, q)) if lat.size else float("nan")
+
+    @property
+    def p50_s(self) -> float:
+        return self.percentile(50)
+
+    @property
+    def p95_s(self) -> float:
+        return self.percentile(95)
+
+    @property
+    def p99_s(self) -> float:
+        return self.percentile(99)
+
+    @property
+    def offload_rate(self) -> float:
+        if not self.records:
+            return float("nan")
+        return float(np.mean([not r.on_device for r in self.records]))
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        misses = [r.missed_deadline for r in self.records if r.missed_deadline is not None]
+        return float(np.mean(misses)) if misses else float("nan")
+
+    @property
+    def accuracy(self) -> float:
+        known = [r.correct for r in self.records if r.correct is not None]
+        return float(np.mean(known)) if known else float("nan")
+
+    @property
+    def mean_queue_depth(self) -> float:
+        if not self.queue_samples:
+            return float("nan")
+        return float(np.mean([d for _, d in self.queue_samples]))
+
+    @property
+    def throughput_rps(self) -> float:
+        if len(self.records) < 2:
+            return float("nan")
+        t0 = min(r.arrival_s for r in self.records)
+        t1 = max(r.complete_s for r in self.records)
+        return len(self.records) / max(t1 - t0, 1e-12)
+
+    # ----------------------------------------------- controller's window
+    def bandwidth_estimate(
+        self, window_s: Optional[float] = None, now: Optional[float] = None
+    ) -> Optional[float]:
+        """Mean observed uplink rate over the trailing window. If the window
+        holds no transfer but older observations exist, the most recent one
+        is returned (stale beats assuming the nominal best-case link); None
+        only when nothing was ever observed."""
+        samples = self.bandwidth_samples
+        if window_s is not None and now is not None:
+            in_window = [(t, b) for t, b in samples if now - window_s <= t <= now]
+            if not in_window:
+                past = [(t, b) for t, b in samples if t <= now]
+                return max(past, key=lambda s: s[0])[1] if past else None
+            samples = in_window
+        if not samples:
+            return None
+        return float(np.mean([b for _, b in samples]))
+
+    def queue_estimate(
+        self, window_s: Optional[float] = None, now: Optional[float] = None
+    ) -> Optional[float]:
+        samples = self.queue_samples
+        if window_s is not None and now is not None:
+            samples = [(t, d) for t, d in samples if now - window_s <= t <= now]
+        if not samples:
+            return None
+        return float(np.mean([d for _, d in samples]))
+
+    def arrival_rate_estimate(
+        self, window_s: float, now: float
+    ) -> Optional[float]:
+        """Fleet-wide arrivals/second over the trailing window (None if no
+        arrival landed in it). A simulation younger than the window divides
+        by the elapsed time instead, so early estimates aren't biased low."""
+        n = sum(1 for t in self.arrival_times if now - window_s <= t <= now)
+        if n == 0:
+            return None
+        span = max(min(window_s, now), 1e-9)
+        return n / span
+
+    # ----------------------------------------------------------- summary
+    def summary(self) -> Dict[str, float]:
+        """Machine-readable (JSON-safe) roll-up of the run."""
+        return {
+            "requests": len(self.records),
+            "p50_ms": self.p50_s * 1e3,
+            "p95_ms": self.p95_s * 1e3,
+            "p99_ms": self.p99_s * 1e3,
+            "mean_ms": float(self.latencies().mean() * 1e3) if self.records else float("nan"),
+            "offload_rate": self.offload_rate,
+            "deadline_miss_rate": self.deadline_miss_rate,
+            "accuracy": self.accuracy,
+            "mean_queue_depth": self.mean_queue_depth,
+            "throughput_rps": self.throughput_rps,
+            "controller_switches": len(self.controller_events),
+        }

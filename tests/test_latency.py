@@ -1,0 +1,120 @@
+"""Latency-profile and network-model tests (offload/latency.py was
+previously untested)."""
+import numpy as np
+import pytest
+
+from repro.models.convnet import payload_bytes
+from repro.offload import latency as L
+from repro.serving.network import (
+    FixedRateNetwork,
+    MarkovNetwork,
+    TraceNetwork,
+    network_for,
+)
+
+
+@pytest.fixture(scope="module")
+def paper():
+    return L.paper_2020()
+
+
+@pytest.fixture(scope="module")
+def tpu():
+    return L.tpu_v5e()
+
+
+def test_profile_construction(paper, tpu):
+    for prof in (paper, tpu):
+        assert set(prof.edge_layer_s) == set(prof.cloud_layer_s)
+        assert {"branch1", "branch2"} <= set(prof.branch_s)
+        assert prof.uplink_bps > 0
+        for table in (prof.edge_layer_s, prof.cloud_layer_s, prof.branch_s):
+            assert all(v > 0 for v in table.values())
+    assert paper.name == "paper_2020" and tpu.name == "tpu_v5e"
+
+
+def test_path_times_positive(paper, tpu):
+    for prof in (paper, tpu):
+        for b in (1, 2):
+            assert L.edge_time(prof, b) > 0
+            assert L.cloud_time(prof, b) > 0
+            assert L.comm_time(prof, b) > 0
+
+
+def test_monotone_in_branch_depth(paper, tpu):
+    for prof in (paper, tpu):
+        # deeper split: more edge compute, less cloud compute, smaller payload
+        assert L.edge_time(prof, 2) > L.edge_time(prof, 1)
+        assert L.cloud_time(prof, 2) < L.cloud_time(prof, 1)
+        assert L.comm_time(prof, 2) < L.comm_time(prof, 1)
+    assert payload_bytes(2) < payload_bytes(1)
+
+
+def test_tpu_v5e_dominates_paper_hardware(paper, tpu):
+    """The pod profile is faster on every leg than the i7/K80/Wi-Fi setup."""
+    for b in (1, 2):
+        assert L.edge_time(tpu, b) < L.edge_time(paper, b)
+        assert L.cloud_time(tpu, b) < L.cloud_time(paper, b)
+        assert L.comm_time(tpu, b) < L.comm_time(paper, b)
+
+
+def test_paper_comm_constant(paper):
+    """The paper's number: branch-1 payload at 18.8 Mbps."""
+    expected = payload_bytes(1) * 8.0 / 18.8e6
+    assert L.comm_time(paper, 1) == pytest.approx(expected, rel=0, abs=0)
+
+
+# ------------------------------------------------------------ network models
+def test_comm_time_network_interface(paper):
+    """network=None and an equivalent FixedRateNetwork agree exactly."""
+    net = network_for(paper)
+    for b in (1, 2):
+        assert L.comm_time(paper, b, network=net, t=123.4) == L.comm_time(paper, b)
+    slow = FixedRateNetwork(paper.uplink_bps / 4)
+    assert L.comm_time(paper, 1, network=slow) == pytest.approx(
+        4 * L.comm_time(paper, 1)
+    )
+
+
+def test_fixed_network_rate():
+    net = FixedRateNetwork(10e6)
+    assert net.rate_bps(0.0) == net.rate_bps(99.0) == 10e6
+    assert net.comm_time(1_000_000, 5.0) == pytest.approx(0.8)
+
+
+def test_markov_network_deterministic_any_query_order():
+    kw = dict(good_bps=20e6, bad_bps=2e6, p_good_to_bad=0.3,
+              p_bad_to_good=0.3, dwell_s=0.5, seed=7)
+    a, b = MarkovNetwork(**kw), MarkovNetwork(**kw)
+    ts = [4.9, 0.1, 2.3, 9.7, 1.1, 7.0]
+    ra = [a.rate_bps(t) for t in ts]  # out-of-order queries
+    rb = [b.rate_bps(t) for t in sorted(ts)]
+    rb = [rb[sorted(ts).index(t)] for t in ts]
+    assert ra == rb
+    assert set(ra) <= {20e6, 2e6}
+    # piecewise constant within a dwell slot
+    assert a.rate_bps(1.26) == a.rate_bps(1.01)
+
+
+def test_markov_network_visits_both_states():
+    net = MarkovNetwork(p_good_to_bad=0.5, p_bad_to_good=0.5, dwell_s=1.0, seed=0)
+    rates = {net.rate_bps(t) for t in range(200)}
+    assert rates == {net.good_bps, net.bad_bps}
+
+
+def test_trace_network_replay_and_period():
+    net = TraceNetwork([0.0, 1.0, 3.0], [10e6, 2e6, 8e6], period_s=4.0)
+    assert net.rate_bps(0.5) == 10e6
+    assert net.rate_bps(1.0) == 2e6
+    assert net.rate_bps(2.9) == 2e6
+    assert net.rate_bps(3.5) == 8e6
+    assert net.rate_bps(4.5) == 10e6  # wrapped
+    with pytest.raises(ValueError):
+        TraceNetwork([1.0, 2.0], [1e6, 2e6])  # must start at 0
+    with pytest.raises(ValueError):
+        TraceNetwork([0.0, 1.0], [1e6, 2e6], period_s=0.5)
+
+
+def test_nonpositive_rate_rejected():
+    with pytest.raises(ValueError):
+        FixedRateNetwork(0.0).comm_time(100, 0.0)

@@ -83,6 +83,81 @@ def test_simulator_latency_accounting():
     np.testing.assert_allclose(outs[-1].time_s, t_cloud, rtol=1e-6)
 
 
+def test_simulator_includes_tail_batch():
+    """n not divisible by batch_size: the final partial batch must be
+    simulated (the old code silently dropped it); drop_last=True restores
+    the truncating behavior."""
+    n, c = 1000, 10  # 1000 = 3*256 + 232
+    z = np.zeros((n, c), np.float32)
+    z[:, 0] = 100.0  # everyone exits on device
+    final = np.zeros((n, c), np.float32)
+    labels = np.zeros(n, np.int64)
+    prof = L.paper_2020()
+    outs = simulate_batches([z], final, labels, 0.9, [1.0], prof, batch_size=256)
+    assert len(outs) == 4  # 3 full + 1 tail of 232
+    assert all(o.accuracy == 1.0 and o.on_device_frac == 1.0 for o in outs)
+    trunc = simulate_batches(
+        [z], final, labels, 0.9, [1.0], prof, batch_size=256, drop_last=True
+    )
+    assert len(trunc) == 3
+    assert [o.time_s for o in trunc] == [o.time_s for o in outs[:3]]
+
+
+def test_simulator_network_repricing():
+    """A time-varying network changes ONLY the comm component, per batch."""
+    from repro.serving.network import FixedRateNetwork, TraceNetwork
+
+    n, c = 512, 10
+    z = np.zeros((n, c), np.float32)  # uniform logits: everyone offloads
+    final = np.zeros((n, c), np.float32)
+    final[:, 0] = 100.0
+    labels = np.zeros(n, np.int64)
+    prof = L.paper_2020()
+    base = simulate_batches([z], final, labels, 0.9, [1.0], prof, batch_size=256)
+    fixed = simulate_batches(
+        [z], final, labels, 0.9, [1.0], prof, batch_size=256,
+        network=FixedRateNetwork(prof.uplink_bps),
+    )
+    assert [o.time_s for o in fixed] == [o.time_s for o in base]
+    halved = TraceNetwork([0.0, 1.0], [prof.uplink_bps, prof.uplink_bps / 2])
+    slow = simulate_batches(
+        [z], final, labels, 0.9, [1.0], prof, batch_size=256,
+        network=halved, batch_times_s=[0.0, 2.0],
+    )
+    assert slow[0].time_s == pytest.approx(base[0].time_s)
+    assert slow[1].time_s == pytest.approx(
+        base[1].time_s + L.comm_time(prof, 1)
+    )
+    with pytest.raises(ValueError):  # one timestamp per simulated batch
+        simulate_batches(
+            [z], final, labels, 0.9, [1.0], prof, batch_size=256,
+            network=halved, batch_times_s=[0.0],
+        )
+
+
+def test_engine_timing_hooks():
+    """edge_step/cloud_step accumulate wall-clock and fire the hook."""
+    from repro.core.policy import OffloadPlan
+    from repro.core.calibration import TemperatureScaling
+    from repro.offload.engine import OffloadEngine
+
+    calls = []
+    engine = OffloadEngine(
+        edge_fn=lambda b: {"exit_logits": np.zeros((4, 10), np.float32),
+                           "payload": np.zeros((4, 8), np.float32)},
+        cloud_fn=lambda p: {"logits": np.ones((p.shape[0], 10), np.float32)},
+        plan=OffloadPlan(p_tar=0.5,
+                         calibrators=[TemperatureScaling.from_temperature(1.0)]),
+        timing_hook=lambda tier, dt, b: calls.append((tier, b)),
+    )
+    out = engine.infer({"x": None})
+    assert out["prediction"].shape == (4,)
+    assert engine.stats.edge_calls == 1
+    assert engine.stats.cloud_calls == 1  # uniform logits: all offloaded
+    assert engine.stats.edge_time_s > 0 and engine.stats.cloud_time_s > 0
+    assert ("edge", 4) in calls and ("cloud", 4) in calls
+
+
 def test_missed_deadline_monotone_in_t_tar():
     n, c = 2048, 10
     rng = np.random.default_rng(0)
