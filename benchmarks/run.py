@@ -1,7 +1,8 @@
 """Benchmark entry point: one function per paper table/figure + the kernel
-microbench, the serving-runtime bench, and the roofline summary. Prints
-``name,us_per_call,derived`` CSV; the serving bench also writes the
-machine-readable ``BENCH_serving.json`` artifact.
+microbench, the serving-runtime bench, the distortion-drift bench, and the
+roofline summary. Prints ``name,us_per_call,derived`` CSV; the serving and
+distortion benches also write the machine-readable ``BENCH_serving.json``
+and ``BENCH_distortion.json`` artifacts.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--epochs N]
 """
@@ -180,6 +181,66 @@ def bench_serving_runtime(n_requests=2000, out_path="BENCH_serving.json"):
     )
 
 
+def bench_distortion_serving(n_requests=1500, out_path="BENCH_distortion.json"):
+    """Offloading under drifting input distortion: uncalibrated plan vs the
+    single global calibrated plan (fit on clean validation data, the
+    paper's procedure) vs the expert PlanBank (one plan per distortion
+    context + the cheap edge-side estimator picking the expert per
+    sample). The scenario is repro.serving.scenarios.run_distortion_drift
+    -- the SAME one tests/test_distortion.py pins down -- under a Markov
+    severity schedule that visits all four regimes. Headline metric:
+    on-device-weighted miscalibration gap |on-device accuracy - p_tar|
+    per regime; CI asserts the bank beats the global plan. Writes the
+    fully deterministic BENCH_distortion.json."""
+    from repro.serving.scenarios import (
+        drift_contexts,
+        fit_drift_plans,
+        run_distortion_drift,
+        severity_drift_schedule,
+        synthetic_distorted_cascade,
+    )
+
+    val, test = synthetic_distorted_cascade()
+    uncal, global_plan, bank = fit_drift_plans(val)
+    sched = severity_drift_schedule()
+    results, wall = {}, 0.0
+    for name, plan in (
+        ("uncalibrated", uncal),
+        ("global_calibrated", global_plan),
+        ("expert_bank", bank),
+    ):
+        t0 = time.perf_counter()
+        tel = run_distortion_drift(plan, test, schedule=sched,
+                                   n_requests=n_requests)
+        wall += time.perf_counter() - t0
+        results[name] = {
+            "summary": tel.summary(),
+            "per_context": tel.per_context_summary(),
+        }
+    g = results["global_calibrated"]["summary"]["miscalibration_gap"]
+    b = results["expert_bank"]["summary"]["miscalibration_gap"]
+    payload = {
+        "scenario": {
+            "contexts": [spec.key for spec in drift_contexts()],
+            "schedule": f"markov(dwell={sched.dwell_s:g}s)",
+            "n_requests": n_requests,
+            "p_tar": bank.default_plan.p_tar,
+            "profile": "paper_2020",
+        },
+        "plans": results,
+        "gap_global": g,
+        "gap_bank": b,
+        "gap_improvement": g - b,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    us = wall / (3 * n_requests) * 1e6
+    return us, (
+        f"gap_uncal={results['uncalibrated']['summary']['miscalibration_gap']:.3f};"
+        f"gap_global={g:.3f};gap_bank={b:.3f};artifact={out_path}"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="skip figure benchmarks")
@@ -195,6 +256,7 @@ def main() -> None:
         ("b_alexnet_train_step", *bench_b_alexnet_step()),
         ("smoke_decode_step", *bench_smoke_decode()),
         ("serving_runtime_per_request", *bench_serving_runtime()),
+        ("distortion_drift_per_request", *bench_distortion_serving()),
     ]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,205 @@
+"""Distortion-robust offloading, end to end on a REAL trained model.
+
+Pacheco et al. (2108.09343): an early-exit DNN calibrated once on clean
+validation data breaks when inputs arrive blurred or noisy. Miscalibration
+under drift has two directions, and a single clean-fit temperature is
+wrong in both:
+
+* OVERconfident drift (Pacheco's nets): accuracy collapses while the head
+  stays confident -- the gate keeps misclassified samples on-device and
+  silently misses p_tar. The synthetic drift scenario and the CI-asserted
+  BENCH_distortion.json exercise this direction.
+* UNDERconfident drift (this example's model, trained with noise
+  augmentation on the smooth-template task): blur/contrast shrink the
+  logit magnitudes faster than they destroy the class evidence, so raw
+  accuracy barely moves while confidence evaporates -- the clean-fit gate
+  starves the edge (on-device rate -> 0), saturates the uplink, and blows
+  up tail latency for NO reliability gain. Expert temperatures here are
+  <1 (sharpening), the mirror image of Pacheco's >1 experts.
+
+The fix is the same for both: a bank of per-distortion *expert*
+calibrators plus a cheap edge-side estimator that recognizes the current
+distortion from input statistics (Laplacian variance + pixel moments --
+no extra DNN).
+
+This example runs the whole pipeline on a trained model (no synthetic
+logits anywhere):
+
+1. train a small early-exit B-AlexNet on the synthetic CIFAR stand-in;
+2. distort the validation/test splits with the parametric taxonomy
+   (`repro.data.distortion`) at the reference contexts;
+3. fit the single global plan (clean val only, the paper's procedure) and
+   the expert `PlanBank` (one plan per context + estimator), and round-trip
+   the bank through JSON -- the whole bank is ONE deployable artifact;
+4. compare them offline per context, then under a drifting Markov severity
+   schedule in the event-driven serving runtime, where each request's
+   expert is chosen by the estimator from that sample's REAL distorted
+   image statistics.
+
+Run:  PYTHONPATH=src python examples/offload_under_distortion.py
+      [--epochs 3] [--requests 1200]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PlanBank, fit_bank, make_plan
+from repro.core.exits import gate_statistics
+from repro.data.distortion import DistortionSpec, apply_distortion, input_features
+from repro.data.synthetic import cifar_like
+from repro.models import convnet
+from repro.models.convnet import B_ALEXNET
+from repro.serving.drift import ContextualLogitsCore, MarkovContextSchedule
+from repro.serving.runtime import RuntimeConfig, ServingRuntime
+from repro.offload import latency as L
+from repro.serving.workload import poisson_workload
+
+P_TAR = 0.8
+
+
+def train(data, epochs):
+    from repro.training import optim
+    from repro.training.loop import make_train_step
+
+    params = convnet.init_params(jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        B_ALEXNET, optim.AdamWConfig(lr=2e-3, weight_decay=1e-4,
+                                     total_steps=80 * epochs),
+        remat=False,
+    ))
+    state = optim.init(params)
+    rng = np.random.default_rng(0)
+    for epoch in range(epochs):
+        order = rng.permutation(len(data.train_y))
+        for s in range(0, len(order) - 128 + 1, 128):
+            idx = order[s : s + 128]
+            batch = {"images": jnp.asarray(data.train_x[idx]),
+                     "labels": jnp.asarray(data.train_y[idx])}
+            params, state, m = step(params, state, batch)
+        print(f"  epoch {epoch}: loss={float(m['loss']):.3f}")
+    return params
+
+
+def logits_of(params, x, bs=512):
+    infer = jax.jit(lambda b: convnet.forward(params, b))
+    outs = [infer(jnp.asarray(x[s : s + bs])) for s in range(0, len(x), bs)]
+    return (
+        np.concatenate([np.asarray(o["exit_logits"][0]) for o in outs]),
+        np.concatenate([np.asarray(o["exit_logits"][1]) for o in outs]),
+        np.concatenate([np.asarray(o["logits"]) for o in outs]),
+    )
+
+
+def per_context_data(params, x, contexts, seed):
+    """Push each context's REALLY distorted images through the model."""
+    out = {"exit_logits": {}, "final": {}, "features": {}}
+    for spec in contexts:
+        xd = apply_distortion(x, spec, seed=seed)
+        z1, z2, zf = logits_of(params, xd)
+        out["exit_logits"][spec.key] = {1: z1, 2: z2}
+        out["final"][spec.key] = zf
+        out["features"][spec.key] = input_features(xd)
+    return out
+
+
+def offline_table(name, plan_of, test, labels):
+    print(f"  {name}: context            | on-device%  | device-acc | gap")
+    for ctx in sorted(test["exit_logits"]):
+        plan = plan_of(ctx)
+        z = test["exit_logits"][ctx][1]
+        conf, pred, _ = gate_statistics(plan.calibrated_logits(z, 0))
+        conf, pred = np.asarray(conf), np.asarray(pred)
+        on = conf >= plan.p_tar
+        acc = (pred[on] == labels[on]).mean() if on.sum() else float("nan")
+        print(f"    {ctx:18s} |    {on.mean():.2f}     |   {acc:.3f}    | "
+              f"{abs(acc - plan.p_tar):.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=1200)
+    args = ap.parse_args()
+
+    print("== 1. train early-exit B-AlexNet (reduced synthetic CIFAR) ==")
+    data = cifar_like(n_train=8_000, n_val=1_500, n_test=3_000, seed=0)
+    params = train(data, args.epochs)
+
+    print("\n== 2. distort val/test splits at the reference contexts ==")
+    # harsher than scenarios.drift_contexts(): this model shrugs off mild
+    # distortion, and the interesting regime is where the clean-fit plan
+    # visibly starves the edge
+    contexts = [
+        DistortionSpec("clean"),
+        DistortionSpec("gaussian_noise", 4),
+        DistortionSpec("gaussian_blur", 4),
+        DistortionSpec("contrast", 3),
+    ]
+    print("  contexts:", [spec.key for spec in contexts])
+    val = per_context_data(params, data.val_x, contexts, seed=1)
+    test = per_context_data(params, data.test_x, contexts, seed=2)
+    val["labels"], test["labels"] = data.val_y, data.test_y
+
+    print("\n== 3. fit global plan (clean only) vs expert PlanBank ==")
+    clean = val["exit_logits"]["clean"]
+    y = jnp.asarray(data.val_y)
+    global_plan = make_plan([clean[1], clean[2]], y, p_tar=P_TAR)
+    bank = fit_bank(
+        {ctx: [z[1], z[2]] for ctx, z in val["exit_logits"].items()},
+        y, p_tar=P_TAR, default_context="clean",
+        features_by_context=val["features"],
+    )
+    bank = PlanBank.from_json(bank.to_json())  # one JSON artifact, reloaded
+    print(f"  global T1={global_plan.temperatures[0]:.2f}; experts:",
+          {ctx: round(p.temperatures[0], 2) for ctx, p in bank.plans.items()})
+
+    print("\n== 4. offline per-context reliability at p_tar =", P_TAR, "==")
+    offline_table("global plan", lambda ctx: global_plan, test, data.test_y)
+    offline_table("expert bank", bank.plan_for, test, data.test_y)
+
+    print("\n== 5. serving under a drifting Markov severity schedule ==")
+    schedule = MarkovContextSchedule(
+        [spec.key for spec in contexts], dwell_s=3.0, p_stay=0.5, seed=10,
+        start_context="clean",
+    )
+    profile = L.paper_2020()
+    for name, deployed in (("global plan", global_plan), ("expert bank", bank)):
+        core = ContextualLogitsCore(
+            test["exit_logits"], test["final"], deployed, schedule,
+            labels=data.test_y, features_by_context=test["features"],
+        )
+        reqs = poisson_workload(40.0, args.requests, core.n_samples,
+                                deadline_s=0.1, seed=7)
+        tel = ServingRuntime(
+            core, profile, deployed, reqs,
+            config=RuntimeConfig(max_batch=4, batch_window_s=0.02),
+        ).run()
+        s = tel.summary()
+        print(f"  {name}: miscal gap={s['miscalibration_gap']:.3f} "
+              f"acc={s['accuracy']:.3f} offload={s['offload_rate']:.2f} "
+              f"p99={s['p99_ms']:.0f}ms")
+        for ctx, row in tel.per_context_summary().items():
+            print(f"      {ctx:18s} gap={row['miscalibration_gap']:.3f} "
+                  f"ondev_acc={row['on_device_accuracy']:.3f} "
+                  f"offl={row['offload_rate']:.2f} "
+                  f"est={row['est_match_rate']:.2f}")
+
+    print("\nthis model drifts UNDERconfident: the clean-fit plan starves the"
+          "\nedge under blur/contrast (on-device -> 0, uplink saturated, p99"
+          "\nblown up) at no reliability gain, while the expert bank keeps"
+          "\n~80% of traffic on-device at the same accuracy by re-sharpening"
+          "\nper regime. The OVERconfident direction (accuracy collapse behind"
+          "\na confident gate -- Pacheco et al., 2108.09343) is exercised by"
+          "\nthe synthetic drift scenario in BENCH_distortion.json. One"
+          "\nclean-fit temperature cannot serve both; a PlanBank serves each"
+          "\nregime with the calibrator fit for it.")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,9 @@ the artifact deployed on the device.
                are JAX pytrees so gating stays jit/vmap-compatible
   policy       OffloadPlan -- the single deployable artifact (per-exit
                calibrator states + gate + partition), JSON round-trip
+  bank         PlanBank -- one expert OffloadPlan per input-distortion
+               context + the cheap edge-side DistortionEstimator that
+               picks the expert per batch; same JSON contract as plans
   partition    adaptive partition-point selection (expected-latency
                optimal); select_partition writes the choice into the plan
   metrics      ECE, reliability diagrams, inference outage, missed deadline
@@ -20,6 +23,11 @@ the artifact deployed on the device.
 Consumers: repro.offload.engine (serving), repro.offload.simulator
 (missed-deadline experiments), benchmarks/ and examples/.
 """
+from repro.core.bank import (  # noqa: F401
+    DistortionEstimator,
+    PlanBank,
+    fit_bank,
+)
 from repro.core.calibration import (  # noqa: F401
     Calibrator,
     CalibratorState,

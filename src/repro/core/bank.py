@@ -1,0 +1,275 @@
+"""Expert calibration banks: one OffloadPlan per input-distortion context.
+
+The paper fits one set of branch temperatures on clean validation data.
+Pacheco et al. (2108.09343) show that gate breaks under blur/noise: the
+side branch stays confident while its accuracy collapses, so the single
+global calibrator silently misses `p_tar`. The fix is a bank of *expert*
+plans -- one `OffloadPlan` fit per distortion context -- plus a cheap
+edge-side estimator that recognizes the current context from input
+statistics and picks the matching expert.
+
+Two pieces, both JSON-serializable so the whole bank ships as one artifact:
+
+* `DistortionEstimator` -- nearest-centroid classifier over the per-image
+  statistics of `repro.data.distortion.input_features` (Laplacian variance
+  + pixel moments + total variation). Features are z-scored with the
+  fit-pool moments; no DNN, no gradient, ~10 flops per feature at serve
+  time. It is domain-agnostic: any (N, F) feature matrix works.
+
+* `PlanBank` -- {context key: OffloadPlan} with a designated default
+  context (the fallback for unrecognized conditions), an optional embedded
+  estimator, and the same versioned JSON round-trip contract as
+  `OffloadPlan` (a reloaded bank gates bit-identically per context).
+
+`fit_bank` builds both from per-context validation logits in one call.
+Consumed by `repro.serving.drift.ContextualLogitsCore` (serving under
+input drift) and `benchmarks/run.py` (the distortion bench).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.policy import OffloadPlan, make_plan
+
+BANK_FORMAT_VERSION = 1
+
+
+# ---------------------------------------------------- distortion estimator
+@dataclass
+class DistortionEstimator:
+    """Nearest-centroid context classifier over cheap input statistics.
+
+    Fit: pool every context's features, z-score with the pooled mean/std,
+    store one normalized centroid per context. Predict: normalize, return
+    the context whose centroid is nearest in L2 -- per batch (`predict`,
+    the serving path: one decision per microbatch of inputs) or per sample
+    (`predict_per_sample`, what the drift simulator precomputes).
+    """
+
+    contexts: List[str]
+    centroids: np.ndarray  # (K, F), z-scored feature space
+    norm_mean: np.ndarray  # (F,)
+    norm_std: np.ndarray  # (F,)
+    feature_names: Optional[Tuple[str, ...]] = None
+
+    @classmethod
+    def fit(
+        cls,
+        features_by_context: Dict[str, np.ndarray],
+        feature_names: Optional[Sequence[str]] = None,
+    ) -> "DistortionEstimator":
+        if not features_by_context:
+            raise ValueError("need at least one context to fit")
+        keys = sorted(features_by_context)
+        feats = {k: np.asarray(features_by_context[k], np.float64) for k in keys}
+        pool = np.concatenate([feats[k] for k in keys], axis=0)
+        mean = pool.mean(axis=0)
+        std = np.maximum(pool.std(axis=0), 1e-9)
+        centroids = np.stack(
+            [((feats[k] - mean) / std).mean(axis=0) for k in keys]
+        )
+        return cls(
+            contexts=list(keys),
+            centroids=centroids,
+            norm_mean=mean,
+            norm_std=std,
+            feature_names=None if feature_names is None else tuple(feature_names),
+        )
+
+    def _distances(self, features: np.ndarray) -> np.ndarray:
+        f = np.asarray(features, np.float64)
+        if f.ndim == 1:
+            f = f[None, :]
+        z = (f - self.norm_mean) / self.norm_std
+        return np.linalg.norm(z[:, None, :] - self.centroids[None, :, :], axis=-1)
+
+    def predict(self, features: np.ndarray) -> str:
+        """One context for a whole batch: classify the batch-mean feature
+        vector (the per-batch selection rule of the serving path)."""
+        f = np.asarray(features, np.float64)
+        batch_mean = f if f.ndim == 1 else f.mean(axis=0)
+        return self.contexts[int(np.argmin(self._distances(batch_mean)[0]))]
+
+    def predict_per_sample(self, features: np.ndarray) -> List[str]:
+        idx = np.argmin(self._distances(features), axis=1)
+        return [self.contexts[int(i)] for i in idx]
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {
+            "contexts": list(self.contexts),
+            "centroids": self.centroids.tolist(),
+            "norm_mean": self.norm_mean.tolist(),
+            "norm_std": self.norm_std.tolist(),
+            "feature_names": (
+                None if self.feature_names is None else list(self.feature_names)
+            ),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DistortionEstimator":
+        names = d.get("feature_names")
+        return cls(
+            contexts=list(d["contexts"]),
+            centroids=np.asarray(d["centroids"], np.float64),
+            norm_mean=np.asarray(d["norm_mean"], np.float64),
+            norm_std=np.asarray(d["norm_std"], np.float64),
+            feature_names=None if names is None else tuple(names),
+        )
+
+
+# --------------------------------------------------------------- plan bank
+@dataclass
+class PlanBank:
+    """{context key: expert OffloadPlan} + fallback + optional estimator.
+
+    The bank is the drifting-conditions analogue of a single plan: the lab
+    fits one expert per expected input regime, serializes the whole bank,
+    and the edge device picks `plan_for(estimated context)` per batch.
+    Context keys are free-form strings; `repro.data.distortion` uses
+    `DistortionSpec.key` (``"gaussian_noise@3"``, ``"clean"``).
+    """
+
+    plans: Dict[str, OffloadPlan]
+    default_context: str
+    estimator: Optional[DistortionEstimator] = None
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.plans:
+            raise ValueError("PlanBank needs at least one plan")
+        if self.default_context not in self.plans:
+            raise ValueError(
+                f"default context {self.default_context!r} has no plan "
+                f"(bank covers {self.contexts})"
+            )
+        if self.estimator is not None:
+            unknown = set(self.estimator.contexts) - set(self.plans)
+            if unknown:
+                raise ValueError(
+                    f"estimator may predict contexts with no expert plan: "
+                    f"{sorted(unknown)}"
+                )
+
+    @property
+    def contexts(self) -> List[str]:
+        return sorted(self.plans)
+
+    @property
+    def default_plan(self) -> OffloadPlan:
+        return self.plans[self.default_context]
+
+    def plan_for(self, context: Optional[str]) -> OffloadPlan:
+        """The expert for `context`, or the default plan for unknown/None
+        contexts (an edge device must never be left without a gate)."""
+        if context is None:
+            return self.default_plan
+        return self.plans.get(context, self.default_plan)
+
+    def select(self, features: np.ndarray) -> Tuple[str, OffloadPlan]:
+        """Estimate the context of an input batch's features and return
+        (context, expert plan) -- the per-batch edge-side decision."""
+        if self.estimator is None:
+            raise ValueError("this bank has no embedded estimator")
+        ctx = self.estimator.predict(features)
+        return ctx, self.plan_for(ctx)
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {
+            "version": BANK_FORMAT_VERSION,
+            "default_context": self.default_context,
+            "plans": {k: p.to_dict() for k, p in self.plans.items()},
+            "estimator": None if self.estimator is None else self.estimator.to_dict(),
+            "metadata": self.metadata,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanBank":
+        version = d.get("version", BANK_FORMAT_VERSION)
+        if version > BANK_FORMAT_VERSION:
+            raise ValueError(
+                f"bank format v{version} is newer than supported "
+                f"v{BANK_FORMAT_VERSION}"
+            )
+        est = d.get("estimator")
+        return cls(
+            plans={k: OffloadPlan.from_dict(p) for k, p in d["plans"].items()},
+            default_context=d["default_context"],
+            estimator=None if est is None else DistortionEstimator.from_dict(est),
+            metadata=d.get("metadata", {}),
+        )
+
+    def to_json(self, **kwargs) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, **kwargs)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PlanBank":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=2))
+
+    @classmethod
+    def load(cls, path: str) -> "PlanBank":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def fit_bank(
+    exit_logits_by_context: Dict[str, Sequence],
+    labels,
+    p_tar: float,
+    default_context: str = "clean",
+    features_by_context: Optional[Dict[str, np.ndarray]] = None,
+    labels_by_context: Optional[Dict[str, Any]] = None,
+    metadata: Optional[Dict[str, Any]] = None,
+    **make_plan_kwargs,
+) -> PlanBank:
+    """Fit one expert OffloadPlan per context + (optionally) the estimator.
+
+    exit_logits_by_context: {context: [exit1_logits, exit2_logits, ...]}
+    from a validation pass over that context's distorted inputs. `labels`
+    is shared across contexts (the usual case: the SAME validation images
+    distorted per context); `labels_by_context` overrides per context.
+    `features_by_context` ({context: (N, F)} from `input_features` on the
+    distorted validation images) additionally fits the embedded
+    `DistortionEstimator`. Extra kwargs go to `make_plan` (method,
+    criterion, sequential, ...).
+    """
+    if default_context not in exit_logits_by_context:
+        raise ValueError(
+            f"default context {default_context!r} not among fitted contexts "
+            f"{sorted(exit_logits_by_context)}"
+        )
+    plans = {}
+    for ctx in sorted(exit_logits_by_context):
+        y = labels if labels_by_context is None else labels_by_context[ctx]
+        plans[ctx] = make_plan(
+            exit_logits_by_context[ctx], y, p_tar=p_tar, **make_plan_kwargs
+        )
+    estimator = None
+    if features_by_context is not None:
+        missing = set(features_by_context) - set(plans)
+        if missing:
+            raise ValueError(
+                f"features provided for contexts with no logits: {sorted(missing)}"
+            )
+        from repro.data.distortion import FEATURE_NAMES
+
+        names = FEATURE_NAMES if all(
+            np.asarray(f).shape[-1] == len(FEATURE_NAMES)
+            for f in features_by_context.values()
+        ) else None
+        estimator = DistortionEstimator.fit(features_by_context, feature_names=names)
+    return PlanBank(
+        plans=plans,
+        default_context=default_context,
+        estimator=estimator,
+        metadata=metadata or {},
+    )

@@ -17,9 +17,20 @@ serving system:
 * `controller`-- an Edgent-style online controller that re-selects the
                  deployed branch and effective p_tar by re-scoring the
                  OffloadPlan's fitted calibrators under measured bandwidth
-                 (no re-fitting).
+                 (no re-fitting);
+* `drift`     -- drifting INPUT conditions: context schedules (piecewise /
+                 Markov regime drift) and `ContextualLogitsCore`, which
+                 serves per-distortion-context logits and picks each
+                 sample's expert plan from a `PlanBank` via the cheap
+                 edge-side distortion estimator.
 """
 from repro.serving.controller import ControllerConfig, OnlineController
+from repro.serving.drift import (
+    ContextSchedule,
+    ContextualLogitsCore,
+    MarkovContextSchedule,
+    PiecewiseSchedule,
+)
 from repro.serving.network import (
     FixedRateNetwork,
     MarkovNetwork,
@@ -44,6 +55,10 @@ from repro.serving.workload import (
 __all__ = [
     "ControllerConfig",
     "OnlineController",
+    "ContextSchedule",
+    "ContextualLogitsCore",
+    "MarkovContextSchedule",
+    "PiecewiseSchedule",
     "NetworkModel",
     "FixedRateNetwork",
     "MarkovNetwork",

@@ -42,6 +42,13 @@ class OnlineController:
     exit_logits: {physical_branch: (N, C) held-out validation logits},
     the same convention as `LogitsCore`. `labels`/`final_logits` enable the
     accuracy floor; without them candidates are ranked by latency alone.
+
+    Accepts a `repro.core.bank.PlanBank` in place of the plan: the bank's
+    default plan is re-scored, so the controller moves the fleet-wide
+    (branch, p_tar) while the bank keeps picking per-context expert
+    calibrators inside the contextual core -- bandwidth-driven re-scoring
+    and distortion-driven expert selection compose without touching each
+    other's state.
     """
 
     def __init__(
@@ -54,6 +61,10 @@ class OnlineController:
         config: Optional[ControllerConfig] = None,
         payload_nbytes=None,
     ):
+        from repro.core.bank import PlanBank
+
+        if isinstance(plan, PlanBank):
+            plan = plan.default_plan
         if plan.criterion != "confidence":
             raise ValueError(
                 "OnlineController re-scores the confidence target p_tar; "

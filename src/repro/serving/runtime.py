@@ -19,7 +19,13 @@ with the paper's closed-form per-sample numbers to float round-off.
 Compute cores decouple the queueing model from the math that decides the
 gate: `LogitsCore` serves precomputed per-branch logits (fast, exact,
 drives tests/benchmarks); `EngineCore` drives a real `OffloadEngine` pair
-of jitted partitions per request batch, reusing its timing hooks.
+of jitted partitions per request batch, reusing its timing hooks. A core
+with ``contextual = True`` (`repro.serving.drift.ContextualLogitsCore`)
+additionally models drifting input conditions: its gate takes the event
+time and reports the (true, estimated) distortion context, and the runtime
+threads both into telemetry. Passing a `PlanBank` instead of a single
+`OffloadPlan` deploys the bank's default plan for (branch, p_tar) while
+the contextual core picks each sample's expert calibrator.
 """
 from __future__ import annotations
 
@@ -171,6 +177,8 @@ class _Pending:
     edge_start_s: float
     edge_done_s: float
     payload_nbytes: int
+    context: Optional[str] = None  # true distortion context at gate time
+    est_context: Optional[str] = None  # what the edge-side estimator said
 
 
 class ServingRuntime:
@@ -194,9 +202,16 @@ class ServingRuntime:
         telemetry: Optional[Telemetry] = None,
         payload_nbytes: Optional[Callable[[int], int]] = None,
     ):
+        from repro.core.bank import PlanBank
+
         self.core = core
         self.profile = profile
+        if isinstance(plan, PlanBank):
+            # the bank's default plan seeds (branch, p_tar); per-sample
+            # expert calibration happens inside the contextual core
+            plan = plan.default_plan
         self.plan = plan
+        self._contextual = bool(getattr(core, "contextual", False))
         self.requests = sorted(requests, key=lambda r: r.arrival_s)
         self.network = network or network_for(profile)
         self.config = config or RuntimeConfig()
@@ -289,7 +304,13 @@ class ServingRuntime:
         self, t: float, req: Request, d: int, start_s: float, branch: int,
         p_tar: float,
     ) -> None:
-        on_device, pred, conf = self.core.gate(req.sample, branch, p_tar)
+        if self._contextual:
+            on_device, pred, conf, ctx, est = self.core.gate(
+                req.sample, branch, p_tar, t
+            )
+        else:
+            on_device, pred, conf = self.core.gate(req.sample, branch, p_tar)
+            ctx = est = None
         if on_device:
             self.telemetry.add(
                 RequestRecord(
@@ -304,12 +325,14 @@ class ServingRuntime:
                     complete_s=t,
                     correct=self.core.correct(req.sample, pred),
                     deadline_s=req.deadline_s,
+                    context=ctx,
+                    est_context=est,
                 )
             )
         else:
             self._batch.append(
                 _Pending(req, branch, p_tar, conf, start_s, t,
-                         self.payload_nbytes(branch))
+                         self.payload_nbytes(branch), ctx, est)
             )
             if len(self._batch) >= self.config.max_batch:
                 self._flush_batch(t)
@@ -355,7 +378,13 @@ class ServingRuntime:
 
     def _on_cloud_done(self, t: float, batch: List[_Pending]) -> None:
         for p in batch:
-            pred = self.core.cloud_predict(p.request.sample, p.branch)
+            if self._contextual:
+                # the cloud main head also sees the distorted input, so its
+                # prediction is conditioned on the gate-time true context
+                pred = self.core.cloud_predict(p.request.sample, p.branch,
+                                               p.context)
+            else:
+                pred = self.core.cloud_predict(p.request.sample, p.branch)
             self.telemetry.add(
                 RequestRecord(
                     req_id=p.request.req_id,
@@ -369,6 +398,8 @@ class ServingRuntime:
                     complete_s=t,
                     correct=self.core.correct(p.request.sample, pred),
                     deadline_s=p.request.deadline_s,
+                    context=p.context,
+                    est_context=p.est_context,
                 )
             )
 

@@ -28,6 +28,8 @@ class RequestRecord:
     complete_s: float
     correct: Optional[bool] = None  # None when the core has no labels
     deadline_s: Optional[float] = None
+    context: Optional[str] = None  # true distortion context at gate time
+    est_context: Optional[str] = None  # edge-side estimator's verdict
 
     @property
     def latency_s(self) -> float:
@@ -120,6 +122,70 @@ class Telemetry:
         t1 = max(r.complete_s for r in self.records)
         return len(self.records) / max(t1 - t0, 1e-12)
 
+    # -------------------------------------------------- per-context reports
+    def _context_groups(self) -> Dict[str, List[RequestRecord]]:
+        """Records grouped by TRUE context; contextless records (plain
+        LogitsCore/EngineCore runs) all land in one "__all__" group, so the
+        same metrics work with and without drift."""
+        groups: Dict[str, List[RequestRecord]] = {}
+        for r in self.records:
+            groups.setdefault(r.context or "__all__", []).append(r)
+        return groups
+
+    @staticmethod
+    def _gap(records: List[RequestRecord]) -> Optional[float]:
+        """|on-device accuracy - mean p_tar in force| for one group -- the
+        paper's reliability contract, measured where it is made: on the
+        samples the gate kept on the device."""
+        on_dev = [r for r in records if r.on_device and r.correct is not None]
+        if not on_dev:
+            return None
+        acc = float(np.mean([r.correct for r in on_dev]))
+        target = float(np.mean([r.p_tar for r in on_dev]))
+        return abs(acc - target)
+
+    def per_context_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per true-context roll-up: request count, offload rate, end-to-end
+        accuracy, on-device accuracy, miscalibration gap, and how often the
+        edge-side estimator named the context correctly."""
+        out: Dict[str, Dict[str, float]] = {}
+        for ctx, recs in sorted(self._context_groups().items()):
+            on_dev = [r for r in recs if r.on_device and r.correct is not None]
+            known = [r.correct for r in recs if r.correct is not None]
+            est = [r for r in recs if r.est_context is not None]
+            gap = self._gap(recs)
+            out[ctx] = {
+                "requests": len(recs),
+                "offload_rate": float(np.mean([not r.on_device for r in recs])),
+                "accuracy": float(np.mean(known)) if known else float("nan"),
+                "on_device_accuracy": (
+                    float(np.mean([r.correct for r in on_dev]))
+                    if on_dev else float("nan")
+                ),
+                "miscalibration_gap": float("nan") if gap is None else gap,
+                "est_match_rate": (
+                    float(np.mean([r.est_context == r.context for r in est]))
+                    if est else float("nan")
+                ),
+            }
+        return out
+
+    def miscalibration_gap(self) -> float:
+        """On-device-count-weighted mean of per-context |on-device accuracy
+        - p_tar|. Aggregating |gap| per regime and then averaging is the
+        honest number under drift: a +5pp regime and a -5pp regime do NOT
+        cancel into "calibrated"."""
+        gaps, weights = [], []
+        for recs in self._context_groups().values():
+            gap = self._gap(recs)
+            if gap is None:
+                continue
+            gaps.append(gap)
+            weights.append(sum(1 for r in recs if r.on_device))
+        if not gaps:
+            return float("nan")
+        return float(np.average(gaps, weights=weights))
+
     # ----------------------------------------------- controller's window
     def bandwidth_estimate(
         self, window_s: Optional[float] = None, now: Optional[float] = None
@@ -176,4 +242,5 @@ class Telemetry:
             "mean_queue_depth": self.mean_queue_depth,
             "throughput_rps": self.throughput_rps,
             "controller_switches": len(self.controller_events),
+            "miscalibration_gap": self.miscalibration_gap(),
         }

@@ -1,0 +1,42 @@
+"""Docs-as-tests: every fenced ```python block in README.md and docs/*.md
+must execute. Blocks run top-to-bottom per file in one shared namespace
+(later snippets may build on earlier ones), inside a temp directory so
+snippets that save plan/bank artifacts don't litter the repo.
+
+Keeping the snippets executable is the whole point of the docs tree: a
+snippet that stops running is a doc that started lying.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = [
+    ROOT / "README.md",
+    ROOT / "docs" / "ARCHITECTURE.md",
+    ROOT / "docs" / "calibration.md",
+]
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def snippets(path: Path):
+    return _FENCE.findall(path.read_text())
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_doc_snippets_run(path, tmp_path, monkeypatch):
+    assert path.exists(), f"{path} is missing"
+    blocks = snippets(path)
+    assert blocks, f"{path.name} has no python snippets to test"
+    monkeypatch.chdir(tmp_path)
+    ns = {"__name__": f"docs_{path.stem}"}
+    for i, code in enumerate(blocks):
+        try:
+            exec(compile(code, f"{path.name}[snippet {i}]", "exec"), ns)
+        except Exception as e:  # pragma: no cover - failure reporting
+            pytest.fail(
+                f"{path.name} snippet {i} raised {type(e).__name__}: {e}\n"
+                f"--- snippet ---\n{code}"
+            )
