@@ -16,6 +16,16 @@ calibrated plan's calibrators against measured bandwidth each second.
 
 Run:  PYTHONPATH=src python examples/serve_under_load.py [--controller]
       [--requests 2000]
+
+With --cells N the same comparison runs at FLEET scale through the
+vectorized simulator (`repro.fleet`): N cells, each with its own device
+pair, its own uplink drawn from the fixed/markov/trace mix, one shared
+cloud -- hundreds of thousands of requests in seconds instead of one
+event loop per request. --controller then deploys the fleet controller
+(per-cell re-scoring, shared-cloud cap) for the calibrated plan.
+
+      PYTHONPATH=src python examples/serve_under_load.py --cells 64
+      [--controller] [--requests 2000]
 """
 import argparse
 import os
@@ -75,11 +85,78 @@ def networks(profile):
     }
 
 
+def run_fleet_scale(args, profile, p_tar, plans, test_exits, test_final,
+                    test_y, val_exits, val_final, val_y):
+    """The --cells fast path: the same plans served over an N-cell fleet
+    by the vectorized simulator instead of the per-request event loop."""
+    import time
+
+    from repro.fleet import (
+        CellConfig,
+        FleetConfig,
+        FleetController,
+        FleetControllerConfig,
+        FleetGateTable,
+        FleetSimulator,
+        FleetTopology,
+    )
+    from repro.fleet.topology import poisson_cell_workload
+
+    nets = networks(profile)
+    net_names = list(nets)
+    n_test = len(test_y)
+    cells = [
+        CellConfig(
+            network=nets[net_names[i % len(net_names)]](),
+            workload=poisson_cell_workload(
+                60.0, args.requests, n_test, n_devices=2, seed=100 + i
+            ),
+            n_devices=2,
+            deadline_s=0.1,
+        )
+        for i in range(args.cells)
+    ]
+    topology = FleetTopology(cells, cloud_servers=4)
+    print(f"\n== fleet fast path: {args.cells} cells x {args.requests} "
+          f"requests = {topology.n_requests} total ==")
+    print(f"{'plan':12s} {'wall_s':>7s} {'sim_rps':>9s} {'p50ms':>8s} "
+          f"{'p95ms':>8s} {'p99ms':>9s} {'miss%':>6s} {'offl%':>6s} "
+          f"{'acc':>5s} {'sw':>4s}")
+    for plan_name, plan in plans.items():
+        table = FleetGateTable.from_logits(test_exits, test_final, plan,
+                                           labels=test_y)
+        controller = None
+        if args.controller and plan_name == "calibrated":
+            controller = FleetController(
+                plan, profile, val_exits, n_cells=args.cells,
+                final_logits=val_final, labels=val_y, cloud_servers=4,
+                config=FleetControllerConfig(
+                    interval_s=1.0, window_s=2.0,
+                    p_tar_grid=(0.5, 0.7, p_tar), min_accuracy=0.9,
+                ),
+            )
+        t0 = time.perf_counter()
+        tel = FleetSimulator(
+            table, topology, profile,
+            config=FleetConfig(window_s=0.5), controller=controller,
+        ).run()
+        wall = time.perf_counter() - t0
+        s = tel.fleet_summary()
+        print(f"{plan_name:12s} {wall:7.2f} {s['requests'] / wall:9.0f} "
+              f"{s['p50_ms']:8.1f} {s['p95_ms']:8.1f} {s['p99_ms']:9.1f} "
+              f"{100 * s['deadline_miss_rate']:6.1f} "
+              f"{100 * s['offload_rate']:6.1f} {s['accuracy']:5.3f} "
+              f"{s['controller_switches']:4d}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=2000)
     ap.add_argument("--controller", action="store_true",
                     help="online re-scoring for the calibrated plan")
+    ap.add_argument("--cells", type=int, default=0,
+                    help="run at fleet scale through repro.fleet "
+                         "(N cells, vectorized; 0 = single-cell event loop)")
     args = ap.parse_args()
 
     profile = L.paper_2020()
@@ -97,6 +174,11 @@ def main():
     print(f"fitted temperatures (calibrated): "
           f"{[round(t, 2) for t in plans['calibrated'].temperatures]}  "
           f"p_tar={p_tar}")
+
+    if args.cells > 0:
+        run_fleet_scale(args, profile, p_tar, plans, test_exits, test_final,
+                        test_y, val_exits, val_final, val_y)
+        return
 
     print(f"\n{'net':7s} {'rate':>5s} {'plan':12s} {'p50ms':>8s} {'p95ms':>8s} "
           f"{'p99ms':>8s} {'miss%':>6s} {'offl%':>6s} {'acc':>5s} {'sw':>3s}")

@@ -24,6 +24,7 @@ Consumers: repro.offload.engine (serving), repro.offload.simulator
 (missed-deadline experiments), benchmarks/ and examples/.
 """
 from repro.core.bank import (  # noqa: F401
+    UNKNOWN_CONTEXT,
     DistortionEstimator,
     PlanBank,
     fit_bank,

@@ -37,6 +37,10 @@ from repro.core.policy import OffloadPlan, make_plan
 
 BANK_FORMAT_VERSION = 1
 
+#: The estimator's verdict when the input matches no fitted context: never a
+#: real context key, and `PlanBank.plan_for` resolves it to the default plan.
+UNKNOWN_CONTEXT = "__unknown__"
+
 
 # ---------------------------------------------------- distortion estimator
 @dataclass
@@ -47,7 +51,21 @@ class DistortionEstimator:
     store one normalized centroid per context. Predict: normalize, return
     the context whose centroid is nearest in L2 -- per batch (`predict`,
     the serving path: one decision per microbatch of inputs) or per sample
-    (`predict_per_sample`, what the drift simulator precomputes).
+    (`predict_per_sample` / `predict_ids`, what the drift simulators
+    precompute).
+
+    Unknown verdict (estimator robustness under inputs the bank was never
+    fit for, e.g. composed distortions like noise+blur): with
+    ``unknown_distance`` set, an input whose nearest-centroid distance
+    exceeds it is off-manifold; with ``unknown_margin`` set, an input whose
+    two nearest centroids are closer than the margin is ambiguous between
+    experts. Either way the verdict is `UNKNOWN_CONTEXT`, which a `PlanBank`
+    resolves to its DEFAULT plan -- falling back to the broadest calibrator
+    instead of gating with the nearest *wrong* expert. Distances live in the
+    z-scored feature space; batch-mean distances (`predict`) concentrate
+    much tighter than per-sample ones (`predict_per_sample`), so thresholds
+    are calibrated for whichever path consumes them. Both default to None
+    (verdicts never unknown, the pre-existing behavior).
     """
 
     contexts: List[str]
@@ -55,12 +73,16 @@ class DistortionEstimator:
     norm_mean: np.ndarray  # (F,)
     norm_std: np.ndarray  # (F,)
     feature_names: Optional[Tuple[str, ...]] = None
+    unknown_distance: Optional[float] = None  # d1 above this -> unknown
+    unknown_margin: Optional[float] = None  # d2 - d1 below this -> unknown
 
     @classmethod
     def fit(
         cls,
         features_by_context: Dict[str, np.ndarray],
         feature_names: Optional[Sequence[str]] = None,
+        unknown_distance: Optional[float] = None,
+        unknown_margin: Optional[float] = None,
     ) -> "DistortionEstimator":
         if not features_by_context:
             raise ValueError("need at least one context to fit")
@@ -78,6 +100,8 @@ class DistortionEstimator:
             norm_mean=mean,
             norm_std=std,
             feature_names=None if feature_names is None else tuple(feature_names),
+            unknown_distance=unknown_distance,
+            unknown_margin=unknown_margin,
         )
 
     def _distances(self, features: np.ndarray) -> np.ndarray:
@@ -87,16 +111,39 @@ class DistortionEstimator:
         z = (f - self.norm_mean) / self.norm_std
         return np.linalg.norm(z[:, None, :] - self.centroids[None, :, :], axis=-1)
 
+    def _ids_from_distances(self, d: np.ndarray) -> np.ndarray:
+        """Nearest-centroid index per row, -1 where the unknown verdict
+        fires (distance cap exceeded, or nearest-vs-second margin too thin
+        to trust with fewer than two contexts the margin rule is moot)."""
+        idx = np.argmin(d, axis=1).astype(np.int64)
+        if self.unknown_distance is not None or self.unknown_margin is not None:
+            part = np.sort(d, axis=1)
+            unknown = np.zeros(len(d), bool)
+            if self.unknown_distance is not None:
+                unknown |= part[:, 0] > self.unknown_distance
+            if self.unknown_margin is not None and d.shape[1] > 1:
+                unknown |= (part[:, 1] - part[:, 0]) < self.unknown_margin
+            idx[unknown] = -1
+        return idx
+
     def predict(self, features: np.ndarray) -> str:
         """One context for a whole batch: classify the batch-mean feature
         vector (the per-batch selection rule of the serving path)."""
         f = np.asarray(features, np.float64)
         batch_mean = f if f.ndim == 1 else f.mean(axis=0)
-        return self.contexts[int(np.argmin(self._distances(batch_mean)[0]))]
+        i = int(self._ids_from_distances(self._distances(batch_mean))[0])
+        return UNKNOWN_CONTEXT if i < 0 else self.contexts[i]
+
+    def predict_ids(self, features: np.ndarray) -> np.ndarray:
+        """Vectorized per-sample verdicts as indices into `contexts`
+        (-1 = unknown) -- the batched path the fleet simulator consumes."""
+        return self._ids_from_distances(self._distances(features))
 
     def predict_per_sample(self, features: np.ndarray) -> List[str]:
-        idx = np.argmin(self._distances(features), axis=1)
-        return [self.contexts[int(i)] for i in idx]
+        return [
+            UNKNOWN_CONTEXT if i < 0 else self.contexts[i]
+            for i in self.predict_ids(features)
+        ]
 
     # ------------------------------------------------------- serialization
     def to_dict(self) -> dict:
@@ -107,6 +154,12 @@ class DistortionEstimator:
             "norm_std": self.norm_std.tolist(),
             "feature_names": (
                 None if self.feature_names is None else list(self.feature_names)
+            ),
+            "unknown_distance": (
+                None if self.unknown_distance is None else float(self.unknown_distance)
+            ),
+            "unknown_margin": (
+                None if self.unknown_margin is None else float(self.unknown_margin)
             ),
         }
 
@@ -119,6 +172,8 @@ class DistortionEstimator:
             norm_mean=np.asarray(d["norm_mean"], np.float64),
             norm_std=np.asarray(d["norm_std"], np.float64),
             feature_names=None if names is None else tuple(names),
+            unknown_distance=d.get("unknown_distance"),
+            unknown_margin=d.get("unknown_margin"),
         )
 
 
@@ -172,11 +227,53 @@ class PlanBank:
 
     def select(self, features: np.ndarray) -> Tuple[str, OffloadPlan]:
         """Estimate the context of an input batch's features and return
-        (context, expert plan) -- the per-batch edge-side decision."""
+        (context, expert plan) -- the per-batch edge-side decision. An
+        `UNKNOWN_CONTEXT` verdict (estimator's distance/margin rule fired)
+        resolves to the default plan, never to the nearest wrong expert."""
         if self.estimator is None:
             raise ValueError("this bank has no embedded estimator")
         ctx = self.estimator.predict(features)
         return ctx, self.plan_for(ctx)
+
+    def gate_block(
+        self,
+        exit_logits: np.ndarray,
+        features: Optional[np.ndarray] = None,
+        branch: Optional[int] = None,
+        expert_ids: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched per-sample expert gating over a whole logit block.
+
+        -> (confidence, prediction, expert_ids): each sample's confidence
+        and argmax under the calibrator of ITS expert plan, where experts
+        come from `expert_ids` (indices into ``self.contexts``, -1 =
+        unknown -> default plan) or, if omitted, from the embedded
+        estimator on `features`. One `OffloadPlan.gate_block` call per
+        DISTINCT expert in the block -- the vectorized fleet path, no
+        per-sample Python.
+        """
+        z = np.asarray(exit_logits)
+        if expert_ids is None:
+            if features is None:
+                raise ValueError("need features or expert_ids to pick experts")
+            if self.estimator is None:
+                raise ValueError("this bank has no embedded estimator")
+            expert_ids = self.estimator.predict_ids(features)
+        expert_ids = np.asarray(expert_ids, np.int64)
+        if expert_ids.shape[0] != z.shape[0]:
+            raise ValueError(
+                f"expert_ids covers {expert_ids.shape[0]} samples but the "
+                f"logit block has {z.shape[0]}"
+            )
+        keys = self.contexts
+        conf = np.empty(z.shape[0], np.float64)
+        pred = np.empty(z.shape[0], np.int64)
+        for eid in np.unique(expert_ids):
+            plan = self.plan_for(keys[eid]) if eid >= 0 else self.default_plan
+            m = expert_ids == eid
+            c, p = plan.gate_block(z[m], branch=branch)
+            conf[m], pred[m] = c, p
+        return conf, pred, expert_ids
 
     # ------------------------------------------------------- serialization
     def to_dict(self) -> dict:
@@ -229,6 +326,7 @@ def fit_bank(
     features_by_context: Optional[Dict[str, np.ndarray]] = None,
     labels_by_context: Optional[Dict[str, Any]] = None,
     metadata: Optional[Dict[str, Any]] = None,
+    estimator_kwargs: Optional[Dict[str, Any]] = None,
     **make_plan_kwargs,
 ) -> PlanBank:
     """Fit one expert OffloadPlan per context + (optionally) the estimator.
@@ -239,8 +337,9 @@ def fit_bank(
     distorted per context); `labels_by_context` overrides per context.
     `features_by_context` ({context: (N, F)} from `input_features` on the
     distorted validation images) additionally fits the embedded
-    `DistortionEstimator`. Extra kwargs go to `make_plan` (method,
-    criterion, sequential, ...).
+    `DistortionEstimator`; `estimator_kwargs` forwards its extra fit
+    options (e.g. ``unknown_distance`` / ``unknown_margin``). Extra kwargs
+    go to `make_plan` (method, criterion, sequential, ...).
     """
     if default_context not in exit_logits_by_context:
         raise ValueError(
@@ -266,7 +365,9 @@ def fit_bank(
             np.asarray(f).shape[-1] == len(FEATURE_NAMES)
             for f in features_by_context.values()
         ) else None
-        estimator = DistortionEstimator.fit(features_by_context, feature_names=names)
+        estimator = DistortionEstimator.fit(
+            features_by_context, feature_names=names, **(estimator_kwargs or {})
+        )
     return PlanBank(
         plans=plans,
         default_context=default_context,

@@ -23,6 +23,8 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.calibration import (
     CalibratorState,
     TemperatureScaling,
@@ -98,6 +100,20 @@ class OffloadPlan:
             entropy_threshold=self.entropy_threshold,
             use_kernel=use_kernel,
         )
+
+    def gate_block(self, exit_logits, branch: Optional[int] = None):
+        """Batched gate statistics for a whole logit block -> numpy
+        (confidence float64, prediction int64) of shape (N,).
+
+        Same math as `gate` (via `gate_statistics` on this branch's
+        calibrated logits, so fleet-scale consumers agree bit-for-bit with
+        the per-request serving cores), returned as host arrays ready for
+        vectorized thresholding `conf >= p_tar` over the whole block.
+        """
+        from repro.core.exits import gate_statistics
+
+        conf, pred, _ = gate_statistics(self.calibrated_logits(exit_logits, branch))
+        return np.asarray(conf, np.float64), np.asarray(pred, np.int64)
 
     def _copy(self, **overrides) -> "OffloadPlan":
         """Fresh OffloadPlan (never the OffloadPolicy shim subclass, whose
@@ -230,6 +246,7 @@ def rescore_plan(
     exit_layer_indices: Optional[Sequence[int]] = None,
     arrival_rate_hz: Optional[float] = None,
     exit_stats: Optional[Sequence] = None,
+    sample_weight=None,
 ):
     """Re-select (deployed exit, effective p_tar) under CURRENT conditions.
 
@@ -252,6 +269,14 @@ def rescore_plan(
     (confidence, prediction) arrays already computed with this plan's
     calibrators (they don't change between re-scores, so a periodic
     controller computes them once and passes them every tick).
+
+    `sample_weight` (length-N, renormalized internally) weights the
+    validation samples when computing each candidate's offload probability
+    and accuracy. This is how a context-aware controller re-scores under
+    input drift: concatenate per-context validation logits and weight each
+    context's block by its estimated share of recent traffic, so the
+    candidate table prices the traffic mix actually being served rather
+    than the clean distribution (see `repro.fleet.controller`).
 
     Returns (new_plan, table): new_plan carries the winning exit_index and
     p_tar; table lists every candidate as a dict, best first.
@@ -276,6 +301,11 @@ def rescore_plan(
     final_correct = None
     if final_logits is not None and y is not None:
         final_correct = np.argmax(np.asarray(final_logits), axis=-1) == y
+    w = None
+    if sample_weight is not None:
+        w = np.asarray(sample_weight, np.float64)
+        if w.ndim != 1 or np.any(w < 0) or w.sum() <= 0:
+            raise ValueError("sample_weight must be 1-D, non-negative, sum > 0")
     table = []
     for i, z in enumerate(exit_logits_list):
         if exit_stats is not None:
@@ -286,7 +316,7 @@ def rescore_plan(
         exit_correct = None if y is None else pred == y
         for p in grid:
             on = conf >= p
-            offload_prob = float((~on).mean())
+            offload_prob = float(np.average(~on, weights=w))
             comm = payload_bytes[i] * 8.0 / uplink_bps
             utilization = (
                 arrival_rate_hz * offload_prob * comm
@@ -300,7 +330,8 @@ def rescore_plan(
             )
             acc = None
             if exit_correct is not None and final_correct is not None:
-                acc = float(np.where(on, exit_correct, final_correct).mean())
+                acc = float(np.average(np.where(on, exit_correct, final_correct),
+                                       weights=w))
             table.append(
                 dict(
                     exit_index=i,

@@ -1,0 +1,48 @@
+"""Fleet-scale vectorized serving simulation.
+
+The event-driven `repro.serving.ServingRuntime` is exact but per-request:
+one Python callback per arrival, gate, transfer, and completion. That is
+the right tool for one cell, and the wrong one for the ROADMAP's
+"millions of users": simulating 100k requests takes minutes of heap
+churn. This package trades per-event exactness for *windowed, vectorized*
+semantics -- whole arrival windows move through each tier as numpy
+blocks -- and simulates hundreds of thousands of requests across dozens
+of cells in seconds, while provably collapsing onto the event runtime in
+the single-cell, single-device, fixed-link limit (pinned by
+`tests/test_fleet.py`).
+
+* `topology`   -- `CellConfig`/`FleetTopology`: C cells, each with its
+                  own device group, shared uplink (`NetworkModel`), drift
+                  schedule, and workload, all feeding one cloud tier;
+* `gate`       -- `FleetGateTable`: per-(context, expert, branch)
+                  confidence/prediction blocks precomputed through the
+                  batched `OffloadPlan.gate_block`/`PlanBank.gate_block`
+                  path, with integer context ids for fancy indexing;
+* `simulator`  -- `FleetSimulator`: the time-stepped vectorized pipeline
+                  (edge FIFO recurrences, per-cell uplink queue, shared
+                  multi-server cloud), all O(window) numpy;
+* `controller` -- `FleetController`: per-cell Edgent-style re-scoring of
+                  (branch, p_tar) from windowed per-cell telemetry, with
+                  a shared-cloud utilization cap across cells;
+* `telemetry`  -- `FleetTelemetry`: per-cell and fleet-wide p50/p95/p99,
+                  miss rate, offload rate, and miscalibration gap, sharing
+                  the metric definitions of `repro.serving.telemetry`;
+* `scenarios`  -- the reference multi-cell drift scenario the acceptance
+                  tests and `BENCH_fleet.json` both run.
+"""
+from repro.fleet.controller import FleetController, FleetControllerConfig
+from repro.fleet.gate import FleetGateTable
+from repro.fleet.simulator import FleetConfig, FleetSimulator
+from repro.fleet.telemetry import FleetTelemetry
+from repro.fleet.topology import CellConfig, FleetTopology
+
+__all__ = [
+    "CellConfig",
+    "FleetTopology",
+    "FleetGateTable",
+    "FleetConfig",
+    "FleetSimulator",
+    "FleetController",
+    "FleetControllerConfig",
+    "FleetTelemetry",
+]

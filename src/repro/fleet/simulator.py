@@ -1,0 +1,362 @@
+"""Time-stepped, vectorized fleet simulator.
+
+Instead of one heap event per arrival/gate/transfer, requests move
+through the tiers as whole *arrival windows* of numpy columns:
+
+    per cell:  arrivals in [t0, t1)  ->  per-device FIFO edge service
+               -> batched gate (FleetGateTable fancy-indexing)
+               -> per-cell shared-uplink FIFO
+    fleet:     all cells' transfers -> ONE cloud tier (K parallel servers)
+
+Every queue is a deterministic-service FIFO, which admits an exact O(n)
+vectorized solve: for done_i = max(t_i, done_{i-1}) + s_i, substituting
+g_i = done_i - cumsum(s)_i turns the recurrence into a running maximum
+(`np.maximum.accumulate`) -- no Python loop per request. The cloud's K
+parallel servers decompose into K independent such chains (job i waits
+for job i-K when service is deterministic); the cloud is solved once,
+globally sorted by transfer completion, after the windowed loop (see
+`_CloudJobs` for why that ordering is the correct one).
+
+Exactness: in the single-cell, single-device, fixed-link, per-sample
+case the windowed pipeline IS the event simulator -- same gate values
+(shared `gate_statistics` math), same FIFO algebra -- and
+`tests/test_fleet.py` pins equality to float round-off, queues empty or
+not. The windowed semantics differ from the event heap only where
+documented: (1) deployed (branch, p_tar) changes at window boundaries
+and applies per ARRIVAL window (the event runtime captures config at
+edge-service start); (2) a multi-device cell enqueues window w's uplink
+transfers before window w+1's even if an idle device finished a later
+arrival earlier; (3) time-varying links price a transfer at its start
+time via one fixed-point repricing pass (exact for piecewise-constant
+links whose state doesn't change between the two passes, and always
+exact for fixed links); (4) offloads ship per sample (no microbatcher).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.fleet.gate import FleetGateTable
+from repro.fleet.telemetry import FleetTelemetry
+from repro.fleet.topology import FleetTopology
+from repro.offload import latency as L
+
+
+def fifo_done(t: np.ndarray, service: np.ndarray, free_s: float) -> np.ndarray:
+    """Completion times of a FIFO single-server queue, vectorized.
+
+    t: sorted job-ready times; service: per-job service times; free_s:
+    when the server frees up from earlier work. Solves
+    done_i = max(t_i, done_{i-1}) + s_i via cumsum + running max.
+    """
+    csum = np.cumsum(service)
+    x = t - (csum - service)  # t_i - cumsum_{<i}
+    if x.size:
+        x[0] = max(x[0], free_s)
+    return np.maximum.accumulate(x) + csum
+
+
+@dataclass
+class FleetConfig:
+    window_s: float = 0.25  # arrival-window width (config switch granularity)
+
+
+class _CloudJobs:
+    """Every offloaded job of the whole run, as growing columns.
+
+    The cloud tier is solved ONCE, after the windowed loop, over all jobs
+    sorted by uplink-completion time. Processing it window-by-window would
+    be wrong, not just inexact: a saturated cell's uplink emits transfers
+    whose completion lies far in the future, and feeding those to the
+    cloud in *generation* order would make jobs from healthy cells queue
+    behind phantom busy servers. Nothing downstream of the cloud feeds
+    back into the simulation, so deferring it is exact.
+    """
+
+    def __init__(self):
+        self.t: List[np.ndarray] = []
+        self.service: List[np.ndarray] = []
+        self.win: List[np.ndarray] = []  # index into the window-cols list
+        self.pos: List[np.ndarray] = []  # index into that window's arrays
+
+    def add(self, t, service, win, pos):
+        self.t.append(t)
+        self.service.append(np.full(len(t), service))
+        self.win.append(np.full(len(t), win, np.int64))
+        self.pos.append(pos)
+
+
+class FleetSimulator:
+    """Run a whole fleet topology through the windowed pipeline.
+
+    table: the shared `FleetGateTable` (all cells serve the same model and
+    deployed plan/bank; per-cell state is (branch, p_tar), moved by the
+    optional fleet controller). Each cell's `ContextSchedule` must visit
+    only contexts the table covers; cells without a schedule serve the
+    table's only context.
+    """
+
+    def __init__(
+        self,
+        table: FleetGateTable,
+        topology: FleetTopology,
+        profile: L.LatencyProfile,
+        config: Optional[FleetConfig] = None,
+        controller=None,
+        payload_nbytes: Optional[Callable[[int], int]] = None,
+    ):
+        self.table = table
+        self.topology = topology
+        self.profile = profile
+        self.config = config or FleetConfig()
+        if self.config.window_s <= 0:
+            raise ValueError("window_s must be positive")
+        self.controller = controller
+        if controller is not None:
+            ratio = controller.interval_s / self.config.window_s
+            if abs(ratio - round(ratio)) > 1e-9 or round(ratio) < 1:
+                raise ValueError(
+                    f"controller interval {controller.interval_s}s must be a "
+                    f"positive multiple of window_s={self.config.window_s}s"
+                )
+            self._ticks_per_update = int(round(ratio))
+            if not set(controller.branches) <= set(table.branches):
+                raise ValueError(
+                    f"controller may deploy branches {controller.branches} "
+                    f"but the table only serves {table.branches}"
+                )
+        if payload_nbytes is None:
+            from repro.models.convnet import payload_bytes  # the paper's model
+
+            payload_nbytes = payload_bytes
+        self.payload_nbytes = payload_nbytes
+
+        plan = table.plan
+        branch = plan.exit_index + 1
+        if branch not in table.branches:
+            raise ValueError(
+                f"plan deploys branch {branch} but the table only serves "
+                f"{table.branches}"
+            )
+        self._initial_state = (branch, float(plan.p_tar))
+        self._state: List[Tuple[int, float]] = []
+        # estimator verdicts (bank key indices) -> table context ids, for
+        # the context-mix telemetry the controller windows
+        self._bank_to_table = np.asarray(
+            [table.ctx_index.get(k, -1) for k in table.bank_keys] or [-1],
+            np.int64,
+        )
+
+        # per-cell schedule-context -> table-context id mapping
+        self._sched_map: List[Optional[np.ndarray]] = []
+        self._static_ctx: List[int] = []
+        for cell in topology.cells:
+            if cell.schedule is None:
+                if len(table.ctx_keys) != 1:
+                    raise ValueError(
+                        "cells without a schedule need a single-context "
+                        f"table; this one covers {table.ctx_keys}"
+                    )
+                self._sched_map.append(None)
+                self._static_ctx.append(0)
+            else:
+                missing = set(cell.schedule.contexts) - set(table.ctx_keys)
+                if missing:
+                    raise ValueError(
+                        f"schedule visits contexts with no logits: "
+                        f"{sorted(missing)}"
+                    )
+                self._sched_map.append(
+                    np.asarray(
+                        [table.ctx_index[k] for k in cell.schedule.contexts],
+                        np.int64,
+                    )
+                )
+                self._static_ctx.append(-1)
+            if len(cell.workload) and int(cell.workload.sample.max()) >= table.n_samples:
+                raise ValueError("workload samples exceed the gate table")
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> FleetTelemetry:
+        topo, cfg, table = self.topology, self.config, self.table
+        tel = FleetTelemetry(
+            topo.n_cells,
+            context_keys=table.ctx_keys,
+            bank_keys=table.bank_keys or None,
+        )
+        for c, cell in enumerate(topo.cells):
+            tel.set_arrivals(c, cell.workload.arrival_s)
+
+        # every run starts from the plan's deployment (a controller from a
+        # previous run() must not leak its final decisions into this one)
+        self._state = [self._initial_state for _ in topo.cells]
+        dev_free = [np.zeros(cell.n_devices) for cell in topo.cells]
+        uplink_free = np.zeros(topo.n_cells)
+        ptr = np.zeros(topo.n_cells, np.int64)
+        n_windows = int(math.ceil(max(topo.horizon_s, 0.0) / cfg.window_s)) + 1
+
+        jobs = _CloudJobs()
+        window_cols = []  # (cell, dict of columns), patched by the cloud solve
+        for w in range(n_windows):
+            t0, t1 = w * cfg.window_s, (w + 1) * cfg.window_s
+            if (
+                self.controller is not None
+                and w > 0
+                and w % self._ticks_per_update == 0
+            ):
+                self._apply_controller(t0, tel)
+
+            for c, cell in enumerate(topo.cells):
+                arr = cell.workload.arrival_s
+                hi = int(np.searchsorted(arr, t1, side="left"))
+                lo = int(ptr[c])
+                ptr[c] = hi
+                if hi == lo:
+                    continue
+                branch, p_tar = self._state[c]
+                cols = self._edge_and_gate(
+                    c, cell, lo, hi, branch, p_tar, dev_free[c]
+                )
+                est = cols["est_id"]
+                tel.observe_contexts(
+                    c, cols["edge_done"],
+                    np.where(est >= 0, self._bank_to_table[np.maximum(est, 0)],
+                             np.where(est == -2, cols["ctx_id"], -1)),
+                )
+                off = ~cols["on_device"]
+                if off.any():
+                    order = np.argsort(cols["edge_done"][off], kind="stable")
+                    pos = np.flatnonzero(off)[order]
+                    t_ready = cols["edge_done"][pos]
+                    nbytes = float(self.payload_nbytes(branch))
+                    rates = cell.network.rates_bps(t_ready)
+                    done = fifo_done(t_ready, nbytes * 8.0 / rates,
+                                     float(uplink_free[c]))
+                    # reprice at the actual transfer start (one fixed-point
+                    # pass; exact for fixed links)
+                    comm = nbytes * 8.0 / cell.network.rates_bps(
+                        done - nbytes * 8.0 / rates
+                    )
+                    done = fifo_done(t_ready, comm, float(uplink_free[c]))
+                    uplink_free[c] = done[-1]
+                    tel.observe_bandwidth(c, t_ready, nbytes * 8.0 / comm)
+                    jobs.add(done, L.cloud_time(self.profile, branch),
+                             len(window_cols), pos)
+                window_cols.append((c, cols))
+
+        self._cloud_solve(jobs, window_cols)
+        self._flush(window_cols, tel)
+        return tel
+
+    # ---------------------------------------------------------- edge tier
+    def _edge_and_gate(self, c, cell, lo, hi, branch, p_tar, dev_free):
+        arr = cell.workload.arrival_s[lo:hi]
+        samples = cell.workload.sample[lo:hi]
+        devices = cell.workload.device[lo:hi]
+        s_edge = L.edge_time(self.profile, branch)
+        edge_done = np.empty(hi - lo)
+        for d in range(cell.n_devices):
+            m = devices == d
+            k = int(m.sum())
+            if k == 0:
+                continue
+            done = fifo_done(arr[m], np.full(k, s_edge), float(dev_free[d]))
+            edge_done[m] = done
+            dev_free[d] = done[-1]
+
+        if self._sched_map[c] is None:
+            ctx_ids = np.full(hi - lo, self._static_ctx[c], np.int64)
+        else:
+            ctx_ids = self._sched_map[c][
+                cell.schedule.context_ids_at(edge_done)
+            ]
+        conf, pred = self.table.gate(ctx_ids, samples, branch)
+        on = conf >= p_tar
+        est = self.table.est_ids(ctx_ids, samples)
+        correct = self.table.correct(samples, pred)
+        n = hi - lo
+        return {
+            "arrival": arr,
+            "samples": samples,
+            "edge_done": edge_done,
+            "complete": edge_done.copy(),
+            "on_device": on,
+            "ctx_id": ctx_ids,
+            "est_id": np.full(n, -2, np.int64) if est is None else est,
+            "correct": (
+                np.full(n, -1, np.int8)
+                if correct is None
+                else correct.astype(np.int8)
+            ),
+            "branch": np.full(n, branch, np.int64),
+            "p_tar": np.full(n, p_tar),
+            "deadline": cell.deadline_s,
+        }
+
+    # ---------------------------------------------------------- cloud tier
+    def _cloud_solve(self, jobs, window_cols):
+        """One global K-server FIFO solve over every offloaded job, sorted
+        by uplink completion: job i waits for job i-K (deterministic
+        service), so each of the K residue classes is an independent
+        single-server chain. Exact for uniform service times; with mixed
+        branches in flight the completion order can locally deviate from
+        the event heap's argmin-server rule (documented approximation)."""
+        if not jobs.t:
+            return
+        t = np.concatenate(jobs.t)
+        service = np.concatenate(jobs.service)
+        win_of = np.concatenate(jobs.win)
+        pos_of = np.concatenate(jobs.pos)
+        order = np.argsort(t, kind="stable")
+        t, service = t[order], service[order]
+        win_of, pos_of = win_of[order], pos_of[order]
+        k = self.topology.cloud_servers
+        done = np.empty(len(t))
+        for r in range(min(k, len(t))):
+            idx = np.arange(r, len(t), k)
+            done[idx] = fifo_done(t[idx], service[idx], 0.0)
+        for w in np.unique(win_of):
+            m = win_of == w
+            _, cols = window_cols[int(w)]
+            pos = pos_of[m]
+            cols["complete"][pos] = done[m]
+            cpred = self.table.cloud_pred(cols["ctx_id"][pos],
+                                          cols["samples"][pos])
+            correct = self.table.correct(cols["samples"][pos], cpred)
+            if correct is not None:
+                cols["correct"][pos] = correct.astype(np.int8)
+
+    def _flush(self, window_cols, tel):
+        for c, cols in window_cols:
+            lat = cols["complete"] - cols["arrival"]
+            if cols["deadline"] is None:
+                missed = np.full(len(lat), -1, np.int8)
+            else:
+                missed = (lat > cols["deadline"]).astype(np.int8)
+            tel.add_window(
+                c,
+                latency_s=lat,
+                on_device=cols["on_device"],
+                correct=cols["correct"],
+                p_tar=cols["p_tar"],
+                branch=cols["branch"],
+                ctx_id=cols["ctx_id"],
+                est_id=cols["est_id"],
+                missed=missed,
+            )
+
+    # ---------------------------------------------------------- controller
+    def _apply_controller(self, t: float, tel: FleetTelemetry) -> None:
+        decisions = self.controller.update(t, tel)
+        if len(decisions) != self.topology.n_cells:
+            raise ValueError(
+                f"controller returned {len(decisions)} decisions for "
+                f"{self.topology.n_cells} cells"
+            )
+        for c, (branch, p_tar) in enumerate(decisions):
+            if (branch, p_tar) != self._state[c]:
+                tel.record_controller(t, c, branch, float(p_tar))
+            self._state[c] = (int(branch), float(p_tar))

@@ -1,0 +1,112 @@
+"""Multi-cell fleet topology.
+
+A *cell* is the unit the paper studies once: a group of edge devices
+behind ONE shared uplink, serving one request stream under one local
+context (distortion) regime. A fleet is C such cells feeding a single
+shared cloud tier. Each cell owns its workload seed, its `NetworkModel`,
+and (optionally) its `ContextSchedule`, so a 64-cell fleet models 64
+sites with different links and different weather -- the regime Danek et
+al. (2025) measure, where shared-uplink contention across many devices
+decides whether offloading pays off.
+
+Workloads are materialized as plain arrays at construction
+(`CellWorkload`), never as per-request objects: the fleet simulator
+consumes arrival/sample/device columns directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.drift import ContextSchedule
+from repro.serving.network import NetworkModel
+
+
+@dataclass
+class CellWorkload:
+    """One cell's request stream as columns (sorted by arrival)."""
+
+    arrival_s: np.ndarray  # (N,) float64, sorted
+    sample: np.ndarray  # (N,) int64 indices into the gate table
+    device: np.ndarray  # (N,) int64 in [0, n_devices)
+
+    def __post_init__(self):
+        self.arrival_s = np.asarray(self.arrival_s, np.float64)
+        self.sample = np.asarray(self.sample, np.int64)
+        self.device = np.asarray(self.device, np.int64)
+        n = self.arrival_s.shape[0]
+        if self.sample.shape != (n,) or self.device.shape != (n,):
+            raise ValueError("arrival_s/sample/device must be equal-length 1-D")
+        if n and np.any(np.diff(self.arrival_s) < 0):
+            raise ValueError("arrival_s must be sorted")
+
+    def __len__(self) -> int:
+        return int(self.arrival_s.shape[0])
+
+
+def poisson_cell_workload(
+    rate_hz: float,
+    n_requests: int,
+    n_samples: int,
+    n_devices: int = 1,
+    seed: int = 0,
+) -> CellWorkload:
+    """Poisson arrivals; samples walk the dataset sequentially and devices
+    round-robin -- the same conventions as `repro.serving.workload`, as
+    columns instead of `Request` objects."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    idx = np.arange(n_requests, dtype=np.int64)
+    return CellWorkload(arrivals, idx % n_samples, idx % n_devices)
+
+
+@dataclass
+class CellConfig:
+    """One cell: device group + shared uplink + local context regime."""
+
+    network: NetworkModel
+    workload: CellWorkload
+    n_devices: int = 1
+    schedule: Optional[ContextSchedule] = None  # None -> static context
+    deadline_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        if len(self.workload) and int(self.workload.device.max()) >= self.n_devices:
+            raise ValueError(
+                f"workload uses device {int(self.workload.device.max())} but "
+                f"the cell has {self.n_devices} device(s)"
+            )
+
+
+@dataclass
+class FleetTopology:
+    """C cells -> one shared cloud tier of `cloud_servers` servers."""
+
+    cells: List[CellConfig]
+    cloud_servers: int = 1
+
+    def __post_init__(self):
+        if not self.cells:
+            raise ValueError("a fleet needs at least one cell")
+        if self.cloud_servers < 1:
+            raise ValueError("cloud_servers must be >= 1")
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.cells)
+
+    @property
+    def n_requests(self) -> int:
+        return sum(len(c.workload) for c in self.cells)
+
+    @property
+    def horizon_s(self) -> float:
+        """Last arrival across the fleet (the simulated span lower bound)."""
+        return max(
+            float(c.workload.arrival_s[-1]) if len(c.workload) else 0.0
+            for c in self.cells
+        )

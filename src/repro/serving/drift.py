@@ -43,6 +43,17 @@ class ContextSchedule:
     def context_at(self, t: float) -> str:
         raise NotImplementedError
 
+    def context_ids_at(self, times) -> np.ndarray:
+        """Vectorized lookup -> (N,) int64 indices into `contexts`. The
+        base implementation loops over `context_at`; both schedule types
+        override it with one indexing op (the fleet simulator resolves
+        whole event windows through this)."""
+        index = {k: i for i, k in enumerate(self.contexts)}
+        t = np.asarray(times, np.float64)
+        return np.asarray(
+            [index[self.context_at(float(x))] for x in t.ravel()], np.int64
+        ).reshape(t.shape)
+
     @property
     def contexts(self) -> List[str]:
         raise NotImplementedError
@@ -64,6 +75,13 @@ class PiecewiseSchedule(ContextSchedule):
     def context_at(self, t: float) -> str:
         i = int(np.searchsorted(self.starts, max(float(t), 0.0), side="right")) - 1
         return self.keys[max(i, 0)]
+
+    def context_ids_at(self, times) -> np.ndarray:
+        t = np.maximum(np.asarray(times, np.float64), 0.0)
+        seg = np.maximum(np.searchsorted(self.starts, t, side="right") - 1, 0)
+        index = {k: i for i, k in enumerate(self.contexts)}
+        seg_to_ctx = np.asarray([index[k] for k in self.keys], np.int64)
+        return seg_to_ctx[seg]
 
     @property
     def contexts(self) -> List[str]:
@@ -116,6 +134,13 @@ class MarkovContextSchedule(ContextSchedule):
     def context_at(self, t: float) -> str:
         slot = int(max(float(t), 0.0) // self.dwell_s)
         return self._contexts[self._state(slot)]
+
+    def context_ids_at(self, times) -> np.ndarray:
+        t = np.asarray(times, np.float64)
+        slots = (np.maximum(t, 0.0) // self.dwell_s).astype(np.int64)
+        if slots.size:
+            self._state(int(slots.max()))  # materialize in order, once
+        return np.asarray(self._states, np.int64)[slots]
 
     @property
     def contexts(self) -> List[str]:

@@ -42,6 +42,15 @@ class NetworkModel:
     def rate_bps(self, t: float = 0.0) -> float:
         raise NotImplementedError
 
+    def rates_bps(self, times) -> np.ndarray:
+        """Vectorized instantaneous rates at an array of times -> (N,)
+        float64. The base implementation loops over `rate_bps`; subclasses
+        whose rate is a step function override it with one indexing op --
+        the fleet simulator prices whole transfer windows through this."""
+        t = np.asarray(times, np.float64)
+        return np.asarray([self.rate_bps(float(x)) for x in t.ravel()],
+                          np.float64).reshape(t.shape)
+
     def comm_time(self, nbytes: float, t: float = 0.0) -> float:
         rate = self.rate_bps(t)
         if rate <= 0:
@@ -58,6 +67,9 @@ class FixedRateNetwork(NetworkModel):
 
     def rate_bps(self, t: float = 0.0) -> float:
         return self.bps
+
+    def rates_bps(self, times) -> np.ndarray:
+        return np.full(np.asarray(times, np.float64).shape, self.bps)
 
 
 class MarkovNetwork(NetworkModel):
@@ -103,12 +115,23 @@ class MarkovNetwork(NetworkModel):
         slot = int(max(t, 0.0) // self.dwell_s)
         return self.bad_bps if self._state(slot) else self.good_bps
 
+    def rates_bps(self, times) -> np.ndarray:
+        t = np.asarray(times, np.float64)
+        slots = (np.maximum(t, 0.0) // self.dwell_s).astype(np.int64)
+        if slots.size:
+            self._state(int(slots.max()))  # materialize in order, once
+        states = np.asarray(self._states, np.int64)[slots]
+        return np.where(states == 1, self.bad_bps, self.good_bps)
+
 
 class TraceNetwork(NetworkModel):
     """Bandwidth-trace replay: rate is a step function of time.
 
-    `times_s` must be sorted and start at 0; segment i holds `rates_bps[i]`
-    until `times_s[i+1]`. With `period_s` set, the trace loops.
+    `times_s` must be sorted and start at 0; segment i holds the i-th
+    trace rate until `times_s[i+1]`. With `period_s` set, the trace
+    loops. The trace array is stored as ``trace_rates_bps`` (the
+    `rates_bps` name is the vectorized-lookup method every NetworkModel
+    exposes).
     """
 
     name = "trace"
@@ -128,7 +151,7 @@ class TraceNetwork(NetworkModel):
         if period_s is not None and period_s <= t[-1]:
             raise ValueError("period_s must exceed the last trace time")
         self.times_s = t
-        self.rates_bps = r
+        self.trace_rates_bps = r
         self.period_s = period_s
 
     def rate_bps(self, t: float = 0.0) -> float:
@@ -136,7 +159,14 @@ class TraceNetwork(NetworkModel):
         if self.period_s is not None:
             t = t % self.period_s
         i = int(np.searchsorted(self.times_s, t, side="right")) - 1
-        return float(self.rates_bps[max(i, 0)])
+        return float(self.trace_rates_bps[max(i, 0)])
+
+    def rates_bps(self, times) -> np.ndarray:
+        t = np.maximum(np.asarray(times, np.float64), 0.0)
+        if self.period_s is not None:
+            t = t % self.period_s
+        i = np.searchsorted(self.times_s, t, side="right") - 1
+        return self.trace_rates_bps[np.maximum(i, 0)]
 
 
 def network_for(profile) -> FixedRateNetwork:

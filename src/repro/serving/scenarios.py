@@ -120,6 +120,7 @@ def synthetic_distorted_cascade(
     n_val: int = 1024,
     c: int = 10,
     seed: int = 0,
+    directions: Optional[Dict[str, str]] = None,
 ) -> Tuple[dict, dict]:
     """-> (val, test) per-context cascade data for the drift scenario.
 
@@ -146,6 +147,18 @@ def synthetic_distorted_cascade(
       observation, and the reason one clean-fit temperature under-corrects
       every distorted regime.
 
+    `directions` optionally flips individual distortion KINDS to the
+    UNDERCONFIDENT drift the trained model of
+    ``examples/offload_under_distortion.py`` exhibits: severity then
+    deflates the logit scale to 1.4 / (1 + 0.6 s) while the affected
+    fraction stays small (phi = 0.05 + 0.03 s) -- accuracy barely moves
+    but confidence evaporates, so a clean-fit gate starves the edge and
+    floods the uplink for no reliability gain, and the matching expert
+    re-SHARPENS (expert T below the clean fit). Keys are distortion kinds
+    (``{"gaussian_blur": "under"}``), value ``"over"`` (the default) or
+    ``"under"``. Omitting the argument reproduces the pre-existing
+    all-overconfident data bit-for-bit.
+
     All per-sample draws happen ONCE per split and are shared by every
     context, so plan comparisons see purely the systematic severity
     effect, never different noise realizations.
@@ -153,6 +166,16 @@ def synthetic_distorted_cascade(
     from repro.data.synthetic import cifar_like
 
     contexts = drift_contexts() if contexts is None else contexts
+    directions = directions or {}
+    unknown_dir = set(directions.values()) - {"over", "under"}
+    if unknown_dir:
+        raise ValueError(f"directions must be 'over'/'under', got {unknown_dir}")
+    unknown_kind = set(directions) - {spec.kind for spec in contexts}
+    if unknown_kind:  # a typoed kind must not silently measure the default
+        raise ValueError(
+            f"directions name kinds absent from the context set: "
+            f"{sorted(unknown_kind)}"
+        )
     rng = np.random.default_rng(seed)
     images = cifar_like(n_train=8, n_val=n_val, n_test=n, seed=seed + 1)
 
@@ -178,8 +201,13 @@ def synthetic_distorted_cascade(
         idx = np.arange(m)
         for spec in contexts:
             s = spec.severity
-            affected = u < (0.2 + 0.12 * s if s else 0.0)
-            scale = 1.4 * (1.0 + 0.5 * s)
+            if directions.get(spec.kind, "over") == "under" and s:
+                # underconfident drift: evidence survives, magnitude doesn't
+                affected = u < 0.05 + 0.03 * s
+                scale = 1.4 / (1.0 + 0.6 * s)
+            else:
+                affected = u < (0.2 + 0.12 * s if s else 0.0)
+                scale = 1.4 * (1.0 + 0.5 * s)
             per_branch = {}
             for b, (c_clean, c_dist, dmul) in views.items():
                 z = base.copy()
@@ -248,6 +276,7 @@ def run_distortion_drift(
     with_controller: bool = False,
     val: Optional[dict] = None,
     profile: Optional[L.LatencyProfile] = None,
+    controller_interval_s: float = 1.0,
 ) -> Telemetry:
     """Serve `test` under severity drift with a plan or an expert bank.
 
@@ -256,7 +285,9 @@ def run_distortion_drift(
     between plans is attributable to calibration alone. with_controller
     (needs `val` for the clean validation logits) layers the Edgent-style
     re-scorer on top, demonstrating that bandwidth-driven (branch, p_tar)
-    moves compose with distortion-driven expert selection.
+    moves compose with distortion-driven expert selection;
+    `controller_interval_s` sets its cadence (the dwell-vs-interval bench
+    sweeps it against the schedule's dwell time).
     """
     profile = profile or L.paper_2020()
     schedule = severity_drift_schedule() if schedule is None else schedule
@@ -276,7 +307,8 @@ def run_distortion_drift(
             plan_or_bank, profile,
             val["exit_logits"]["clean"],
             final_logits=val["final"]["clean"], labels=val["labels"],
-            config=ControllerConfig(interval_s=1.0, window_s=2.0,
+            config=ControllerConfig(interval_s=controller_interval_s,
+                                    window_s=2.0 * controller_interval_s,
                                     min_accuracy=0.85),
         )
     rt = ServingRuntime(

@@ -15,6 +15,34 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 
+# ------------------------------------------------------ shared primitives
+def latency_stats_ms(latencies_s: np.ndarray) -> Dict[str, float]:
+    """p50/p95/p99/mean in ms from an array of per-request latencies --
+    the one definition of the repo's latency roll-up, shared by the
+    event-driven `Telemetry` and the fleet-scale aggregator."""
+    lat = np.asarray(latencies_s, np.float64)
+    if lat.size == 0:
+        nan = float("nan")
+        return {"p50_ms": nan, "p95_ms": nan, "p99_ms": nan, "mean_ms": nan}
+    p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+    return {
+        "p50_ms": float(p50) * 1e3,
+        "p95_ms": float(p95) * 1e3,
+        "p99_ms": float(p99) * 1e3,
+        "mean_ms": float(lat.mean()) * 1e3,
+    }
+
+
+def on_device_gap(correct: np.ndarray, p_tar: np.ndarray) -> Optional[float]:
+    """|on-device accuracy - mean p_tar in force| for one regime group --
+    the paper's reliability contract, measured where it is made: on the
+    samples the gate kept on the device. None for an empty group."""
+    correct = np.asarray(correct, np.float64)
+    if correct.size == 0:
+        return None
+    return abs(float(correct.mean()) - float(np.mean(p_tar)))
+
+
 @dataclass
 class RequestRecord:
     req_id: int
@@ -134,15 +162,14 @@ class Telemetry:
 
     @staticmethod
     def _gap(records: List[RequestRecord]) -> Optional[float]:
-        """|on-device accuracy - mean p_tar in force| for one group -- the
-        paper's reliability contract, measured where it is made: on the
-        samples the gate kept on the device."""
+        """One group's reliability gap (see `on_device_gap`)."""
         on_dev = [r for r in records if r.on_device and r.correct is not None]
         if not on_dev:
             return None
-        acc = float(np.mean([r.correct for r in on_dev]))
-        target = float(np.mean([r.p_tar for r in on_dev]))
-        return abs(acc - target)
+        return on_device_gap(
+            np.asarray([r.correct for r in on_dev]),
+            np.asarray([r.p_tar for r in on_dev]),
+        )
 
     def per_context_summary(self) -> Dict[str, Dict[str, float]]:
         """Per true-context roll-up: request count, offload rate, end-to-end

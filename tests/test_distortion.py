@@ -143,6 +143,81 @@ def test_estimator_recognizes_contexts(images):
         assert rt.predict_per_sample(f) == est.predict_per_sample(f)
 
 
+def test_estimator_unknown_verdict_on_composed_distortions():
+    """Estimator robustness (ROADMAP): the bank is fit on PURE contexts;
+    composed distortions (noise then blur, blur then noise) are inputs no
+    expert was fit for. With the distance/margin thresholds set, the
+    batch-level verdict must stay correct on held-out pure contexts and
+    become UNKNOWN on composed ones -- and `PlanBank.select` must then
+    fall back to the DEFAULT plan instead of the nearest wrong expert."""
+    from repro.core import UNKNOWN_CONTEXT
+    from repro.data.synthetic import cifar_like
+    from repro.serving.scenarios import drift_contexts
+
+    imgs = cifar_like(n_train=8, n_val=256, n_test=256, seed=1)
+    contexts = drift_contexts()
+    feats = {
+        s.key: input_features(apply_distortion(imgs.val_x, s, seed=11))
+        for s in contexts
+    }
+    est = DistortionEstimator.fit(
+        feats, feature_names=FEATURE_NAMES,
+        unknown_distance=0.15, unknown_margin=0.15,
+    )
+    # held-out realizations of the PURE fit contexts still classify
+    for s in contexts:
+        f = input_features(apply_distortion(imgs.test_x, s, seed=12))
+        assert est.predict(f) == s.key
+    # composed distortions the bank never saw -> unknown, not wrong-expert
+    composed = []
+    for a, b in [(("gaussian_blur", 3), ("gaussian_noise", 2)),
+                 (("gaussian_noise", 4), ("gaussian_blur", 4))]:
+        x = apply_distortion(imgs.test_x, DistortionSpec(*a), seed=12)
+        x = apply_distortion(x, DistortionSpec(*b), seed=13)
+        composed.append(input_features(x))
+    for f in composed:
+        assert est.predict(f) == UNKNOWN_CONTEXT
+
+    # a bank embedding this estimator serves composed traffic with the
+    # default plan (the broadest calibrator), never a wrong expert
+    logits = {s.key: np.random.default_rng(0).normal(size=(256, 10)) for s in contexts}
+    y = np.random.default_rng(1).integers(0, 10, 256)
+    bank = fit_bank(
+        {k: [z, z] for k, z in logits.items()}, y, p_tar=0.8,
+        default_context="clean", features_by_context=feats,
+        estimator_kwargs=dict(unknown_distance=0.15, unknown_margin=0.15),
+    )
+    ctx, plan = bank.select(composed[0])
+    assert ctx == UNKNOWN_CONTEXT
+    assert plan is bank.default_plan
+
+    # thresholds survive the JSON round-trip verbatim
+    rt = DistortionEstimator.from_dict(est.to_dict())
+    assert rt.unknown_distance == est.unknown_distance
+    assert rt.unknown_margin == est.unknown_margin
+    for f in composed:
+        assert rt.predict(f) == UNKNOWN_CONTEXT
+
+
+def test_estimator_unknown_ids_and_per_sample():
+    """predict_ids marks unknowns as -1 and predict_per_sample mirrors it;
+    thresholds off (None) never produce unknowns -- the pre-existing
+    behavior."""
+    from repro.core import UNKNOWN_CONTEXT
+
+    rng = np.random.default_rng(0)
+    feats = {"a": rng.normal(size=(64, 4)), "b": rng.normal(3.0, 1.0, (64, 4))}
+    est = DistortionEstimator.fit(feats)
+    assert (est.predict_ids(feats["a"]) >= 0).all()
+    strict = DistortionEstimator.fit(feats, unknown_distance=0.0)
+    ids = strict.predict_ids(feats["a"])
+    assert (ids == -1).all()
+    assert set(strict.predict_per_sample(feats["a"])) == {UNKNOWN_CONTEXT}
+    # margin rule alone: ambiguous points midway between centroids
+    margin_est = DistortionEstimator.fit(feats, unknown_margin=1e9)
+    assert set(margin_est.predict_per_sample(feats["b"])) == {UNKNOWN_CONTEXT}
+
+
 # --------------------------------------------------------------- plan bank
 def test_plan_bank_json_round_trip_bit_identical(drift_data):
     """A bank serialized to JSON and reloaded produces bit-identical gate

@@ -16,6 +16,7 @@ DOC_FILES = [
     ROOT / "README.md",
     ROOT / "docs" / "ARCHITECTURE.md",
     ROOT / "docs" / "calibration.md",
+    ROOT / "docs" / "fleet.md",
 ]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.S)

@@ -1,0 +1,448 @@
+"""Fleet-scale vectorized simulator, controller, and telemetry tests.
+
+The anchor is the single-cell limit: with one cell, one device, a fixed
+link, and per-sample transfers, the windowed vectorized pipeline must
+reproduce the event-driven `ServingRuntime` request-for-request -- same
+offload decisions, same latencies to float round-off, queues empty or
+congested, plain logits or drifting contexts. On top of that: closed-form
+agreement, determinism under seeds, batched-gate/estimator plumbing, the
+context-aware fleet controller, and the ISSUE 4 acceptance scenario
+(calibrated fleet controller beats the static uncalibrated plan on fleet
+p99 AND miscalibration gap at >=100k requests across >=64 cells).
+"""
+import numpy as np
+import pytest
+
+from repro.core.calibration import TemperatureScaling
+from repro.core.policy import OffloadPlan, rescore_plan
+from repro.offload import latency as L
+from repro.serving import (
+    FixedRateNetwork,
+    LogitsCore,
+    MarkovNetwork,
+    RuntimeConfig,
+    ServingRuntime,
+    TraceNetwork,
+    constant_workload,
+    poisson_workload,
+)
+from repro.serving.drift import ContextualLogitsCore, MarkovContextSchedule
+from repro.serving.scenarios import (
+    fit_drift_plans,
+    severity_drift_schedule,
+    synthetic_cascade_logits,
+    synthetic_distorted_cascade,
+)
+from repro.fleet import (
+    CellConfig,
+    FleetConfig,
+    FleetController,
+    FleetControllerConfig,
+    FleetGateTable,
+    FleetSimulator,
+    FleetTopology,
+)
+from repro.fleet.simulator import fifo_done
+from repro.fleet.topology import CellWorkload, poisson_cell_workload
+
+
+def as_cell_workload(requests):
+    """The same Request stream the event runtime serves, as columns."""
+    return CellWorkload(
+        np.asarray([r.arrival_s for r in requests]),
+        np.asarray([r.sample for r in requests]),
+        np.asarray([r.device for r in requests]),
+    )
+
+
+@pytest.fixture(scope="module")
+def cascade():
+    exits, final, y = synthetic_cascade_logits(512)
+    plan = OffloadPlan(
+        p_tar=0.8,
+        calibrators=[TemperatureScaling.from_temperature(1.0)] * 2,
+    )
+    return exits, final, y, plan, L.paper_2020()
+
+
+@pytest.fixture(scope="module")
+def drift_data():
+    # the underconfident-blur variant the fleet bench runs
+    val, test = synthetic_distorted_cascade(
+        directions={"gaussian_blur": "under"}
+    )
+    return val, test, fit_drift_plans(val)
+
+
+# ------------------------------------------------------- FIFO recurrence
+def test_fifo_done_matches_sequential():
+    rng = np.random.default_rng(0)
+    t = np.sort(rng.uniform(0, 10, 200))
+    s = rng.uniform(0.01, 0.3, 200)
+    done = fifo_done(t, s, free_s=2.0)
+    prev = 2.0
+    for i in range(200):
+        prev = max(t[i], prev) + s[i]
+        assert done[i] == pytest.approx(prev, rel=1e-12)
+
+
+# -------------------------------------------------- single-cell equality
+@pytest.mark.parametrize("congested", [False, True], ids=["empty", "queued"])
+def test_fleet_matches_event_runtime_single_cell(cascade, congested):
+    """One cell, one device, fixed link, per-sample transfers: the
+    vectorized pipeline IS the event simulator, request for request."""
+    exits, final, y, plan, profile = cascade
+    n = len(y)
+    if congested:
+        reqs = poisson_workload(120.0, 800, n, deadline_s=0.1, seed=4)
+    else:
+        reqs = constant_workload(10.0, n, n, deadline_s=0.1)
+    rt = ServingRuntime(
+        LogitsCore(exits, final, plan, labels=y), profile, plan, reqs,
+        network=FixedRateNetwork(profile.uplink_bps),
+        config=RuntimeConfig(max_batch=1),
+    )
+    tel = rt.run()
+
+    topo = FleetTopology([
+        CellConfig(network=FixedRateNetwork(profile.uplink_bps),
+                   workload=as_cell_workload(reqs), deadline_s=0.1)
+    ], cloud_servers=1)
+    table = FleetGateTable.from_logits(exits, final, plan, labels=y)
+    ftel = FleetSimulator(table, topo, profile,
+                          config=FleetConfig(window_s=0.5)).run()
+
+    f = ftel.fleet_summary()
+    s = tel.summary()
+    assert f["requests"] == s["requests"]
+    assert f["offload_rate"] == pytest.approx(s["offload_rate"], abs=0)
+    assert f["accuracy"] == pytest.approx(s["accuracy"], abs=0)
+    # request-for-request: the sorted latency vectors agree to round-off
+    ev = np.sort(tel.latencies())
+    fl = np.sort(ftel._cells[0].column("latency_s"))
+    np.testing.assert_allclose(fl, ev, rtol=1e-9, atol=1e-12)
+    assert f["p99_ms"] == pytest.approx(s["p99_ms"], rel=1e-9)
+    assert f["mean_ms"] == pytest.approx(s["mean_ms"], rel=1e-9)
+    assert f["deadline_miss_rate"] == pytest.approx(
+        s["deadline_miss_rate"], abs=0
+    )
+
+
+def test_fleet_matches_closed_form(cascade):
+    """Empty queues + fixed link: every latency equals the paper's
+    closed-form edge / edge+comm+cloud sums."""
+    exits, final, y, plan, profile = cascade
+    n = len(y)
+    reqs = constant_workload(10.0, n, n)
+    topo = FleetTopology([
+        CellConfig(network=FixedRateNetwork(profile.uplink_bps),
+                   workload=as_cell_workload(reqs))
+    ])
+    table = FleetGateTable.from_logits(exits, final, plan, labels=y)
+    tel = FleetSimulator(table, topo, profile).run()
+    lat = tel._cells[0].column("latency_s")
+    on = tel._cells[0].column("on_device")
+    t_edge = L.edge_time(profile, 1)
+    t_cloud = t_edge + L.comm_time(profile, 1) + L.cloud_time(profile, 1)
+    np.testing.assert_allclose(lat[on], t_edge, rtol=1e-9)
+    np.testing.assert_allclose(lat[~on], t_cloud, rtol=1e-9)
+
+
+def test_fleet_matches_event_runtime_under_drift(drift_data):
+    """Single-cell limit with a PlanBank + Markov context schedule: expert
+    selection, per-context telemetry, and the miscalibration gap agree
+    with ContextualLogitsCore under the event runtime."""
+    val, test, (uncal, global_plan, bank) = drift_data
+    profile = L.paper_2020()
+    n = len(test["labels"])
+    reqs = poisson_workload(40.0, 900, n, deadline_s=0.1, seed=7)
+    core = ContextualLogitsCore(
+        test["exit_logits"], test["final"], bank, severity_drift_schedule(),
+        labels=test["labels"], features_by_context=test["features"],
+    )
+    tel = ServingRuntime(core, profile, bank, reqs,
+                         config=RuntimeConfig(max_batch=1)).run()
+
+    topo = FleetTopology([
+        CellConfig(network=FixedRateNetwork(profile.uplink_bps),
+                   workload=as_cell_workload(reqs),
+                   schedule=severity_drift_schedule(), deadline_s=0.1)
+    ])
+    table = FleetGateTable(
+        test["exit_logits"], test["final"], bank,
+        labels=test["labels"], features_by_context=test["features"],
+    )
+    ftel = FleetSimulator(table, topo, profile).run()
+    s, f = tel.summary(), ftel.fleet_summary()
+    assert f["offload_rate"] == pytest.approx(s["offload_rate"], abs=0)
+    assert f["accuracy"] == pytest.approx(s["accuracy"], abs=0)
+    assert f["p99_ms"] == pytest.approx(s["p99_ms"], rel=1e-9)
+    assert f["miscalibration_gap"] == pytest.approx(
+        s["miscalibration_gap"], abs=1e-12
+    )
+    ev_ctx = tel.per_context_summary()
+    fl_ctx = ftel.per_context_summary()
+    assert set(fl_ctx) == set(ev_ctx)
+    for ctx in ev_ctx:
+        for k in ("requests", "offload_rate", "on_device_accuracy",
+                  "miscalibration_gap", "est_match_rate"):
+            assert fl_ctx[ctx][k] == pytest.approx(ev_ctx[ctx][k], abs=1e-12), (
+                ctx, k
+            )
+
+
+# ----------------------------------------------------------- determinism
+def test_fleet_deterministic_under_seed(drift_data):
+    from repro.fleet.scenarios import reference_fleet, run_fleet
+
+    val, test, (uncal, global_plan, bank) = drift_data
+
+    def run(seed):
+        scn = reference_fleet(n_cells=8, requests_per_cell=200, seed=seed,
+                              val=val, test=test)
+        tel = run_fleet(bank, scn, with_controller=True)
+        return tel.fleet_summary()
+
+    a, b = run(0), run(0)
+    assert a == b  # bit-identical, dicts and all
+    c = run(1)
+    assert c["p99_ms"] != a["p99_ms"]  # the seed genuinely matters
+
+
+def test_vectorized_network_and_schedule_lookups():
+    """rates_bps / context_ids_at agree with the scalar paths at every
+    query point, in any order."""
+    times = np.linspace(0.0, 30.0, 301)
+    for net in (
+        FixedRateNetwork(5e6),
+        MarkovNetwork(seed=3, dwell_s=0.7),
+        TraceNetwork([0.0, 4.0, 6.0], [1e6, 2e6, 3e6], period_s=10.0),
+    ):
+        vec = net.rates_bps(times)
+        scalar = [net.rate_bps(float(t)) for t in times]
+        np.testing.assert_array_equal(vec, scalar)
+    sch = MarkovContextSchedule(["a", "b", "c"], dwell_s=0.9, seed=5)
+    ids = sch.context_ids_at(times)
+    keys = [sch.contexts[i] for i in ids]
+    assert keys == [sch.context_at(float(t)) for t in times]
+
+
+# ----------------------------------------------------- batched gate path
+def test_gate_block_matches_logits_core(cascade):
+    exits, final, y, plan, profile = cascade
+    core = LogitsCore(exits, final, plan, labels=y)
+    for b in (1, 2):
+        conf, pred = plan.gate_block(exits[b], branch=b - 1)
+        np.testing.assert_array_equal(conf, core.conf[b])
+        np.testing.assert_array_equal(pred, core.pred[b])
+
+
+def test_bank_gate_block_matches_per_sample_selection(drift_data):
+    """PlanBank.gate_block under estimator ids == gating each sample with
+    its own expert plan."""
+    val, test, (uncal, global_plan, bank) = drift_data
+    ctx = "gaussian_noise@2"
+    z = test["exit_logits"][ctx][1]
+    feats = test["features"][ctx]
+    conf, pred, eids = bank.gate_block(z, features=feats, branch=0)
+    keys = bank.contexts
+    for i in range(0, len(z), 97):  # spot-check a spread of samples
+        plan = bank.plan_for(keys[eids[i]]) if eids[i] >= 0 else bank.default_plan
+        c, p = plan.gate_block(z[i:i + 1], branch=0)
+        assert conf[i] == c[0]
+        assert pred[i] == p[0]
+
+
+# ------------------------------------------------------ fleet controller
+def test_rescore_plan_sample_weight():
+    """Weighting the validation samples moves offload probability and
+    accuracy exactly as the weighted mixture dictates."""
+    exits, final, y = synthetic_cascade_logits(256)
+    plan = OffloadPlan(
+        p_tar=0.8, calibrators=[TemperatureScaling.from_temperature(1.0)] * 2
+    )
+    kw = dict(
+        edge_times_s=[1e-3, 2e-3], cloud_times_s=[5e-3, 4e-3],
+        payload_bytes=[65536, 24576], uplink_bps=1e7,
+        labels=y, final_logits=final,
+    )
+    _, table_u = rescore_plan(plan, [exits[1], exits[2]], **kw)
+    w = np.zeros(256)
+    w[:64] = 1.0  # price only the first quarter of the traffic
+    _, table_w = rescore_plan(plan, [exits[1], exits[2]], sample_weight=w, **kw)
+    row_u = next(r for r in table_u if r["exit_index"] == 0)
+    row_w = next(r for r in table_w if r["exit_index"] == 0)
+    conf, _ = plan.gate_block(exits[1], branch=0)
+    expect = float((conf[:64] < 0.8).mean())
+    assert row_w["offload_prob"] == pytest.approx(expect)
+    assert row_w["offload_prob"] != row_u["offload_prob"]
+    with pytest.raises(ValueError):
+        rescore_plan(plan, [exits[1], exits[2]],
+                     sample_weight=-np.ones(256), **kw)
+
+
+def test_fleet_controller_concedes_only_under_distress(drift_data):
+    """A cell on the nominal link holds the plan's p_tar; a cell whose
+    measured uplink cannot carry full-p_tar traffic makes the weakest
+    stable concession; the shared-cloud cap demotes the heaviest cell."""
+    val, test, (uncal, global_plan, bank) = drift_data
+    profile = L.paper_2020()
+    ctrl = FleetController(
+        bank, profile, val["exit_logits"], n_cells=2,
+        final_logits=val["final"], labels=val["labels"],
+        cloud_servers=4,
+        config=FleetControllerConfig(
+            interval_s=1.0, window_s=2.0,
+            p_tar_grid=(0.3, 0.5, 0.7, 0.8), min_accuracy=0.8,
+        ),
+    )
+
+    class Tel:
+        context_keys = sorted(test["exit_logits"])
+
+        def bandwidth_estimate(self, c, w, now):
+            return [profile.uplink_bps, 1.5e6][c]
+
+        def arrival_rate_estimate(self, c, w, now):
+            return 20.0
+
+        def context_mix_estimate(self, c, w, now):
+            k = len(self.context_keys)
+            return np.full(k, 1.0 / k)
+
+    decisions = ctrl.update(1.0, Tel())
+    (b0, p0), (b1, p1) = decisions
+    assert p0 == bank.default_plan.p_tar  # healthy link: contract held
+    assert p1 < bank.default_plan.p_tar  # distressed link: conceded
+    assert p1 in (0.3, 0.5, 0.7)
+    # the concession is the WEAKEST stable one: every higher-p_tar grid
+    # point must be uplink-infeasible at the measured 1.5 Mbps for both
+    # branches (otherwise the controller should have kept it)
+    for p in (0.5, 0.7):
+        if p <= p1:
+            continue
+        for branch in (1, 2):
+            payload = [65536, 24576][branch - 1]
+            util = 20.0 * _offload_at(bank, val, branch, p) * payload * 8 / 1.5e6
+            assert util >= 0.95, (p, branch, util)
+
+
+def _offload_at(bank, val, branch, p_tar):
+    # mean offload over contexts under each context's expert calibrator
+    offs = []
+    for ctx, z in val["exit_logits"].items():
+        conf, _ = bank.plan_for(ctx).gate_block(z[branch], branch=branch - 1)
+        offs.append(float((conf < p_tar).mean()))
+    return float(np.mean(offs))
+
+
+def test_fleet_controller_shared_cloud_cap(drift_data):
+    """With a tiny shared cloud, the aggregate-utilization pass demotes
+    cells relative to the uncapped decisions."""
+    val, test, (uncal, global_plan, bank) = drift_data
+    profile = L.paper_2020()
+
+    def decisions(rho_max):
+        ctrl = FleetController(
+            bank, profile, val["exit_logits"], n_cells=8,
+            final_logits=val["final"], labels=val["labels"],
+            cloud_servers=1,
+            config=FleetControllerConfig(
+                p_tar_grid=(0.3, 0.5, 0.8), min_accuracy=0.8,
+                cloud_rho_max=rho_max,
+            ),
+        )
+
+        class Tel:
+            context_keys = sorted(test["exit_logits"])
+
+            def bandwidth_estimate(self, c, w, now):
+                return profile.uplink_bps
+
+            def arrival_rate_estimate(self, c, w, now):
+                # gentle enough that every uplink stays stable at full
+                # p_tar (no distress concession), so any demotion must
+                # come from the shared-cloud pass alone
+                return 40.0
+
+            def context_mix_estimate(self, c, w, now):
+                k = len(self.context_keys)
+                return np.full(k, 1.0 / k)
+
+        return ctrl.update(1.0, Tel())
+
+    free = decisions(rho_max=None)
+    capped = decisions(rho_max=0.01)
+    total_off_free = sum(_offload_at(bank, val, b, p) for b, p in free)
+    total_off_capped = sum(_offload_at(bank, val, b, p) for b, p in capped)
+    assert total_off_capped < total_off_free
+
+
+# --------------------------------------------------------- validation
+def test_fleet_validation_errors(cascade):
+    exits, final, y, plan, profile = cascade
+    table = FleetGateTable.from_logits(exits, final, plan, labels=y)
+    wl = poisson_cell_workload(10.0, 50, len(y))
+    cell = CellConfig(network=FixedRateNetwork(1e7), workload=wl)
+    with pytest.raises(ValueError, match="at least one cell"):
+        FleetTopology([])
+    with pytest.raises(ValueError, match="window_s"):
+        FleetSimulator(table, FleetTopology([cell]), profile,
+                       config=FleetConfig(window_s=0.0))
+    with pytest.raises(ValueError, match="device"):
+        CellConfig(network=FixedRateNetwork(1e7),
+                   workload=poisson_cell_workload(10.0, 50, len(y), n_devices=4),
+                   n_devices=2)
+    entropy_plan = OffloadPlan(
+        p_tar=0.8, calibrators=list(plan.calibrators),
+        criterion="entropy", entropy_threshold=0.5,
+    )
+    with pytest.raises(ValueError, match="criteri"):
+        FleetGateTable.from_logits(exits, final, entropy_plan)
+    ctrl = FleetController(plan, profile, exits, n_cells=1)
+    with pytest.raises(ValueError, match="multiple"):
+        FleetSimulator(table, FleetTopology([cell]), profile,
+                       config=FleetConfig(window_s=0.3), controller=ctrl)
+
+
+# ----------------------------------------------- ISSUE 4 acceptance
+@pytest.mark.slow
+def test_fleet_acceptance_controller_beats_uncal(drift_data):
+    """THE acceptance criterion: >=100k requests across >=64 cells, and
+    the calibrated fleet controller beats the static uncalibrated plan on
+    BOTH fleet p99 and miscalibration gap -- the same scenario the
+    CI-asserted BENCH_fleet.json is generated from."""
+    from repro.fleet.scenarios import reference_fleet, run_fleet
+
+    val, test, (uncal, global_plan, bank) = drift_data
+    scn = reference_fleet(val=val, test=test)
+    assert scn.topology.n_cells >= 64
+    assert scn.topology.n_requests >= 100_000
+    u = run_fleet(uncal, scn).fleet_summary()
+    c = run_fleet(bank, scn, with_controller=True).fleet_summary()
+    assert c["p99_ms"] < 0.8 * u["p99_ms"], (c["p99_ms"], u["p99_ms"])
+    assert c["miscalibration_gap"] < 0.6 * u["miscalibration_gap"], (
+        c["miscalibration_gap"], u["miscalibration_gap"]
+    )
+    assert c["accuracy"] > u["accuracy"]
+
+
+def test_fleet_acceptance_small(drift_data):
+    """A fast guard on the acceptance direction at 16 cells. The full
+    p99-vs-uncal win needs the long horizon of the slow test (uncal's
+    saturated cells take tens of seconds to grow their queues); what must
+    hold at ANY scale is that the controller rescues the calibrated
+    fleet's tail (vs the bank served statically) and beats the
+    uncalibrated plan on the miscalibration gap without giving up its
+    accuracy win."""
+    from repro.fleet.scenarios import reference_fleet, run_fleet
+
+    val, test, (uncal, global_plan, bank) = drift_data
+    scn = reference_fleet(n_cells=16, requests_per_cell=400,
+                          val=val, test=test)
+    u = run_fleet(uncal, scn).fleet_summary()
+    b = run_fleet(bank, scn).fleet_summary()
+    c = run_fleet(bank, scn, with_controller=True).fleet_summary()
+    assert c["miscalibration_gap"] < 0.6 * u["miscalibration_gap"]
+    assert c["p99_ms"] < 0.5 * b["p99_ms"]
+    assert c["accuracy"] > u["accuracy"]
