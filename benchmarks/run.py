@@ -190,10 +190,16 @@ def bench_distortion_serving(n_requests=1500, out_path="BENCH_distortion.json"):
     -- the SAME one tests/test_distortion.py pins down -- under a Markov
     severity schedule that visits all four regimes. Headline metric:
     on-device-weighted miscalibration gap |on-device accuracy - p_tar|
-    per regime; CI asserts the bank beats the global plan. Writes the
-    fully deterministic BENCH_distortion.json."""
+    per regime; CI asserts the bank beats the global plan. A second pair
+    of arms serves the global plan WITH the online controller: once
+    re-scoring on clean validation logits only (the original rule) and
+    once context-AWARE (candidate tables weighted by the traffic mix the
+    runtime's own telemetry observed; the fleet's rule ported back) --
+    CI asserts the context-aware arm's gap is strictly smaller. Writes
+    the fully deterministic BENCH_distortion.json."""
     from repro.serving.scenarios import (
         drift_contexts,
+        drift_controller_config,
         fit_drift_plans,
         run_distortion_drift,
         severity_drift_schedule,
@@ -220,13 +226,36 @@ def bench_distortion_serving(n_requests=1500, out_path="BENCH_distortion.json"):
     g = results["global_calibrated"]["summary"]["miscalibration_gap"]
     b = results["expert_bank"]["summary"]["miscalibration_gap"]
 
+    # controller arms (satellite of ISSUE 5): same global plan, same
+    # reference controller config -- the only difference is the
+    # INFORMATION the re-score prices (clean val logits vs the observed
+    # traffic mix over all contexts' val logits)
+    ctrl_results = {}
+    for name, ca in (
+        ("controller_clean_val", False),
+        ("controller_context_aware", True),
+    ):
+        t0 = time.perf_counter()
+        tel = run_distortion_drift(
+            global_plan, test, schedule=severity_drift_schedule(),
+            n_requests=n_requests, with_controller=True, val=val,
+            context_aware=ca, controller_config=drift_controller_config(),
+        )
+        wall += time.perf_counter() - t0
+        ctrl_results[name] = {
+            "summary": tel.summary(),
+            "per_context": tel.per_context_summary(),
+        }
+    gc = ctrl_results["controller_clean_val"]["summary"]["miscalibration_gap"]
+    gx = ctrl_results["controller_context_aware"]["summary"]["miscalibration_gap"]
+
     # dwell-time vs controller-interval sweep (ROADMAP "bench breadth"):
     # how does the bank + online controller fare when regime drift is
     # faster or slower than the controller's re-score cadence? Each combo
     # serves the same workload under a fresh Markov schedule with the
     # given dwell; reported per combo: gap, p99, controller switches.
     sweep = []
-    total_requests = 3 * n_requests  # the three headline runs
+    total_requests = 5 * n_requests  # three headline runs + two controller arms
     for dwell_s in (1.0, 3.0, 8.0):
         for interval_s in (0.5, 2.0):
             t0 = time.perf_counter()
@@ -257,9 +286,13 @@ def bench_distortion_serving(n_requests=1500, out_path="BENCH_distortion.json"):
             "profile": "paper_2020",
         },
         "plans": results,
+        "controller_arms": ctrl_results,
         "gap_global": g,
         "gap_bank": b,
         "gap_improvement": g - b,
+        "gap_controller_clean": gc,
+        "gap_controller_context_aware": gx,
+        "gap_context_aware_improvement": gc - gx,
         "dwell_interval_sweep": sweep,
     }
     with open(out_path, "w") as f:
@@ -267,7 +300,8 @@ def bench_distortion_serving(n_requests=1500, out_path="BENCH_distortion.json"):
     us = wall / total_requests * 1e6
     return us, (
         f"gap_uncal={results['uncalibrated']['summary']['miscalibration_gap']:.3f};"
-        f"gap_global={g:.3f};gap_bank={b:.3f};artifact={out_path}"
+        f"gap_global={g:.3f};gap_bank={b:.3f};"
+        f"gap_ctrl_clean={gc:.3f};gap_ctrl_ctx={gx:.3f};artifact={out_path}"
     )
 
 
@@ -310,6 +344,58 @@ def bench_fleet(out_path="BENCH_fleet.json"):
     c = runs["expert_bank_controller"]["fleet"]
     n_req = scenario.topology.n_requests
     total_wall = sum(wall.values())
+
+    # gate-backend microbench (satellite of ISSUE 5): the same reference
+    # gate table window-gated through the host numpy backend and the
+    # jitted JAX backend, at the reference fleet's window sizes (one
+    # 0.5 s window of the 64-cell fleet is ~640 arrivals) and the larger
+    # windows a scaled-up fleet would push. Parity is asserted (identical
+    # decisions, confidences to 1e-6); the speedup column is the
+    # throughput claim and is machine-dependent.
+    from repro.fleet.gate import FleetGateTable
+
+    tables = {
+        name: FleetGateTable(
+            scenario.test["exit_logits"], scenario.test["final"], bank,
+            labels=scenario.test["labels"],
+            features_by_context=scenario.test["features"], backend=name,
+        )
+        for name in ("numpy", "jax")
+    }
+    rng = np.random.default_rng(0)
+    n_cells = scenario.topology.n_cells
+    gate_rows, parity = [], True
+    for n_window in (640, 8192, 65536):
+        ctx = rng.integers(0, len(tables["numpy"].ctx_keys), n_window)
+        smp = rng.integers(0, tables["numpy"].n_samples, n_window)
+        cells = rng.integers(0, n_cells, n_window)
+        branch_by_cell = 1 + (np.arange(n_cells) % 2)
+        p_tar_by_cell = np.where(np.arange(n_cells) % 3 == 0, 0.5, 0.8)
+        out, us = {}, {}
+        for name, table in tables.items():
+            call = lambda: table.gate_window_cells(  # noqa: E731
+                ctx, smp, cells, branch_by_cell, p_tar_by_cell, n_cells
+            )
+            call()  # warm the jit/trace cache outside the timing
+            t0 = time.perf_counter()
+            iters = 20
+            for _ in range(iters):
+                out[name] = call()
+            us[name] = (time.perf_counter() - t0) / iters * 1e6
+        ok = bool(
+            np.array_equal(out["numpy"]["on_device"], out["jax"]["on_device"])
+            and np.array_equal(out["numpy"]["prediction"], out["jax"]["prediction"])
+            and np.allclose(out["numpy"]["confidence"], out["jax"]["confidence"],
+                            rtol=1e-5, atol=1e-6)
+        )
+        parity = parity and ok
+        gate_rows.append({
+            "window": n_window,
+            "numpy_us": us["numpy"],
+            "jax_us": us["jax"],
+            "speedup_jax_vs_numpy": us["numpy"] / us["jax"],
+            "parity": ok,
+        })
     payload = {
         "scenario": {
             "cells": scenario.topology.n_cells,
@@ -327,6 +413,7 @@ def bench_fleet(out_path="BENCH_fleet.json"):
         "gap_uncal": u["miscalibration_gap"],
         "gap_controller": c["miscalibration_gap"],
         "gap_improvement": u["miscalibration_gap"] - c["miscalibration_gap"],
+        "gate_backend": {"parity": parity, "windows": gate_rows},
         # wall-clock figures are machine-dependent and excluded from any
         # determinism assertion; they are the throughput claim
         "wall_clock": {

@@ -16,6 +16,13 @@ the artifact deployed on the device.
   bank         PlanBank -- one expert OffloadPlan per input-distortion
                context + the cheap edge-side DistortionEstimator that
                picks the expert per batch; same JSON contract as plans
+  gatepath     the shared gate execution layer: GateBackend (host numpy /
+               jitted JAX) + the dense GateTable both serving stacks gate
+               whole windows through
+  control      the shared controller core: rescore_plan candidate tables,
+               feasibility/hysteresis/concession rules, ControllerCore
+               (context-aware mix-weighted re-scoring), and the telemetry
+               primitives both serving stacks report and window with
   partition    adaptive partition-point selection (expected-latency
                optimal); select_partition writes the choice into the plan
   metrics      ECE, reliability diagrams, inference outage, missed deadline
@@ -39,7 +46,30 @@ from repro.core.calibration import (  # noqa: F401
     get_calibrator,
     register_calibrator,
 )
+from repro.core.control import (  # noqa: F401
+    ControlConfig,
+    ControllerCore,
+    choose_with_concession,
+    hold_incumbent,
+    latency_stats_ms,
+    on_device_gap,
+    row_feasible,
+    select_candidate,
+    windowed_mean,
+    windowed_mix,
+    windowed_rate,
+)
 from repro.core.exits import apply_gate, cascade_gate, gate_statistics  # noqa: F401
+from repro.core.gatepath import (  # noqa: F401
+    STATIC_CONTEXT,
+    GateBackend,
+    GateTable,
+    JaxGateBackend,
+    NumpyGateBackend,
+    available_gate_backends,
+    get_gate_backend,
+    register_gate_backend,
+)
 from repro.core.metrics import (  # noqa: F401
     ece,
     inference_outage_probability,

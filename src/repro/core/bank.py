@@ -241,6 +241,7 @@ class PlanBank:
         features: Optional[np.ndarray] = None,
         branch: Optional[int] = None,
         expert_ids: Optional[np.ndarray] = None,
+        backend=None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Batched per-sample expert gating over a whole logit block.
 
@@ -248,10 +249,14 @@ class PlanBank:
         and argmax under the calibrator of ITS expert plan, where experts
         come from `expert_ids` (indices into ``self.contexts``, -1 =
         unknown -> default plan) or, if omitted, from the embedded
-        estimator on `features`. One `OffloadPlan.gate_block` call per
-        DISTINCT expert in the block -- the vectorized fleet path, no
-        per-sample Python.
+        estimator on `features`. `backend` selects the execution path
+        (`repro.core.gatepath`): the default numpy backend makes one
+        `OffloadPlan.gate_block` call per DISTINCT expert in the block;
+        the ``"jax"`` backend gathers per-sample expert temperatures and
+        evaluates the whole block in one jitted call.
         """
+        from repro.core.gatepath import get_gate_backend
+
         z = np.asarray(exit_logits)
         if expert_ids is None:
             if features is None:
@@ -265,14 +270,9 @@ class PlanBank:
                 f"expert_ids covers {expert_ids.shape[0]} samples but the "
                 f"logit block has {z.shape[0]}"
             )
-        keys = self.contexts
-        conf = np.empty(z.shape[0], np.float64)
-        pred = np.empty(z.shape[0], np.int64)
-        for eid in np.unique(expert_ids):
-            plan = self.plan_for(keys[eid]) if eid >= 0 else self.default_plan
-            m = expert_ids == eid
-            c, p = plan.gate_block(z[m], branch=branch)
-            conf[m], pred[m] = c, p
+        conf, pred = get_gate_backend(backend).bank_gate_block(
+            self, z, expert_ids, branch=branch
+        )
         return conf, pred, expert_ids
 
     # ------------------------------------------------------- serialization

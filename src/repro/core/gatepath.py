@@ -1,0 +1,541 @@
+"""The shared gate execution layer: one decision, two backends.
+
+Every serving surface in this repo makes the same per-sample decision --
+calibrate a branch's logits, take max-softmax confidence and the argmax
+prediction, compare against the moving target ``p_tar`` -- but before
+this module each surface carried its own copy of the evaluation loop:
+`OffloadPlan.gate_block` / `PlanBank.gate_block` on the host, the fleet
+gate table's per-(context, expert, branch) precompute, and the
+contextual serving core's per-plan-key loop. `GateBackend` extracts that
+evaluation into one swappable object:
+
+* `NumpyGateBackend` (``"numpy"``, the default) -- the pre-existing host
+  path: eager `gate_statistics` per block, one call per distinct expert,
+  float64 numpy outputs. Bit-identical to the code it replaced; the
+  single-cell fleet/event-runtime parity tests pin it.
+* `JaxGateBackend` (``"jax"``) -- jitted whole-window evaluation: per-
+  sample expert temperatures are gathered and the calibrate -> softmax
+  confidence -> argmax -> compare -> per-cell segment reductions chain
+  runs as ONE compiled function. Windows are padded to the next power of
+  two so the trace cache stays O(log N) over a run, and the gate tables
+  live device-resident between calls -- the layout that shards across
+  cells on a multi-device mesh (cells are independent rows of the same
+  gather, the natural `shard_map` axis).
+
+Consumers select a backend per run: `OffloadPlan.gate_block(...,
+backend=)`, `PlanBank.gate_block(..., backend=)`, `GateTable(...,
+backend=)` (the fleet's dense table, formerly `fleet.gate.FleetGateTable`
+-- that name remains as a shim), and
+`repro.serving.drift.ContextualLogitsCore(..., backend=)`.
+
+Numerics: both backends run the same float32 `gate_statistics` math; the
+jitted path may differ in the last ulp (XLA fusion), which is why the
+parity tests assert decisions exactly on reference data but confidences
+to ~1e-6. A sample whose confidence lands exactly on ``p_tar`` could in
+principle flip between backends; no reference dataset exercises that
+measure-zero boundary.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: context id used when a core has no drift axis (plain logits, no schedule)
+STATIC_CONTEXT = "__all__"
+
+
+# ------------------------------------------------------------- the backends
+class GateBackend:
+    """Evaluates gate blocks and whole arrival windows.
+
+    Block primitives (`plan_gate_block`, `bank_gate_block`) produce the
+    per-sample (confidence, prediction) arrays every consumer thresholds;
+    window primitives (`window_gate`, `window_gate_cells`) evaluate a
+    precomputed dense table over an arrival window's (context, sample)
+    indices, the fleet simulator's inner loop.
+    """
+
+    name: str = "base"
+
+    # ------------------------------------------------------- block level
+    def plan_gate_block(
+        self, plan, exit_logits, branch: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def bank_gate_block(
+        self, bank, exit_logits, expert_ids: np.ndarray,
+        branch: Optional[int] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    # ------------------------------------------------------ window level
+    def window_gate(
+        self, conf_table, pred_table, ctx_ids, samples, branch_idx: int,
+        p_tar: float,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """-> (confidence, prediction, on_device) for one cell's window."""
+        raise NotImplementedError
+
+    def window_gate_cells(
+        self, conf_table, pred_table, ctx_ids, samples, cell_ids,
+        branch_idx_by_cell, p_tar_by_cell, n_cells: int,
+    ):
+        """Whole-fleet window: every cell's arrivals in one evaluation.
+
+        -> dict with per-sample ``confidence``/``prediction``/``on_device``
+        plus the per-cell segment reductions ``on_count``/``offload_count``
+        (shape (n_cells,)) -- the telemetry-facing sums computed inside
+        the same pass that gates.
+        """
+        raise NotImplementedError
+
+    def as_table(self, array):
+        """Backend-resident view of a dense gate table (host numpy in,
+        whatever the backend gathers from out)."""
+        return array
+
+
+class NumpyGateBackend(GateBackend):
+    """The host fancy-index path -- the exact code the serving and fleet
+    stacks ran before the backends were extracted, so every existing
+    parity/tolerance test pins it bit-for-bit."""
+
+    name = "numpy"
+
+    def plan_gate_block(self, plan, exit_logits, branch=None):
+        from repro.core.exits import gate_statistics
+
+        conf, pred, _ = gate_statistics(plan.calibrated_logits(exit_logits, branch))
+        return np.asarray(conf, np.float64), np.asarray(pred, np.int64)
+
+    def bank_gate_block(self, bank, exit_logits, expert_ids, branch=None):
+        z = np.asarray(exit_logits)
+        expert_ids = np.asarray(expert_ids, np.int64)
+        keys = bank.contexts
+        conf = np.empty(z.shape[0], np.float64)
+        pred = np.empty(z.shape[0], np.int64)
+        for eid in np.unique(expert_ids):
+            plan = bank.plan_for(keys[eid]) if eid >= 0 else bank.default_plan
+            m = expert_ids == eid
+            c, p = self.plan_gate_block(plan, z[m], branch=branch)
+            conf[m], pred[m] = c, p
+        return conf, pred
+
+    def window_gate(self, conf_table, pred_table, ctx_ids, samples,
+                    branch_idx, p_tar):
+        conf = conf_table[ctx_ids, branch_idx, samples]
+        pred = pred_table[ctx_ids, branch_idx, samples]
+        return conf, pred, conf >= p_tar
+
+    def window_gate_cells(self, conf_table, pred_table, ctx_ids, samples,
+                          cell_ids, branch_idx_by_cell, p_tar_by_cell,
+                          n_cells):
+        cell_ids = np.asarray(cell_ids, np.int64)
+        bi = np.asarray(branch_idx_by_cell, np.int64)[cell_ids]
+        conf = conf_table[ctx_ids, bi, samples]
+        pred = pred_table[ctx_ids, bi, samples]
+        on = conf >= np.asarray(p_tar_by_cell, np.float64)[cell_ids]
+        on_count = np.bincount(cell_ids, weights=on, minlength=n_cells)
+        total = np.bincount(cell_ids, minlength=n_cells)
+        return {
+            "confidence": conf,
+            "prediction": pred,
+            "on_device": on,
+            "on_count": on_count.astype(np.int64),
+            "offload_count": (total - on_count).astype(np.int64),
+        }
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+class JaxGateBackend(GateBackend):
+    """Jitted whole-window gate evaluation.
+
+    Per-sample expert temperatures are gathered on device, so a bank
+    block with K distinct experts costs the same single fused kernel as a
+    plain plan block (the numpy path pays one Python call per expert).
+    Windows are padded to the next power of two before the compiled call
+    (bounding retraces to O(log N)); richer-than-temperature calibrators
+    fall back to the host path, which keeps the backend exact for every
+    plan the repo can serialize.
+    """
+
+    name = "jax"
+
+    def __init__(self):
+        self._jit_cache: Dict[str, Callable] = {}
+        self._host = NumpyGateBackend()
+
+    # ------------------------------------------------------ jitted bodies
+    def _stats_fn(self):
+        if "stats" not in self._jit_cache:
+            import jax
+
+            from repro.core.exits import gate_statistics
+
+            def f(z, t):
+                conf, pred, _ = gate_statistics(z, t)
+                return conf, pred
+
+            self._jit_cache["stats"] = jax.jit(f)
+        return self._jit_cache["stats"]
+
+    def _gather_fn(self):
+        if "gather" not in self._jit_cache:
+            import jax
+            import jax.numpy as jnp
+
+            def f(conf_t, pred_t, ctx, bi, samples, p_tar):
+                conf = conf_t[ctx, bi, samples]
+                pred = pred_t[ctx, bi, samples]
+                return conf, pred, conf >= p_tar
+
+            self._jit_cache["gather"] = jax.jit(f)
+        return self._jit_cache["gather"]
+
+    def _cells_fn(self):
+        if "cells" not in self._jit_cache:
+            import jax
+            import jax.numpy as jnp
+
+            def f(conf_t, pred_t, ctx, samples, cells, bi_by_cell,
+                  p_tar_by_cell, valid, n_cells):
+                bi = bi_by_cell[cells]
+                conf = conf_t[ctx, bi, samples]
+                pred = pred_t[ctx, bi, samples]
+                on = (conf >= p_tar_by_cell[cells]) & valid
+                seg = jax.ops.segment_sum
+                on_count = seg(on.astype(jnp.int32), cells,
+                               num_segments=n_cells)
+                total = seg(valid.astype(jnp.int32), cells,
+                            num_segments=n_cells)
+                return conf, pred, on, on_count, total - on_count
+
+            self._jit_cache["cells"] = jax.jit(f, static_argnames=("n_cells",))
+        return self._jit_cache["cells"]
+
+    # ------------------------------------------------------- block level
+    @staticmethod
+    def _scalar_temperature(state) -> Optional[float]:
+        if state.kind == "identity":
+            return 1.0
+        if state.kind == "temperature":
+            return float(state.params["temperature"])
+        return None
+
+    def plan_gate_block(self, plan, exit_logits, branch=None):
+        state = plan._state_for(branch)
+        t = self._scalar_temperature(state)
+        if t is None:  # richer calibrator: exact host path
+            return self._host.plan_gate_block(plan, exit_logits, branch)
+        conf, pred = self._stats_fn()(np.asarray(exit_logits), t)
+        return np.asarray(conf, np.float64), np.asarray(pred, np.int64)
+
+    def bank_gate_block(self, bank, exit_logits, expert_ids, branch=None):
+        keys = bank.contexts
+        plans = [bank.plan_for(k) for k in keys] + [bank.default_plan]
+        temps = [
+            self._scalar_temperature(p._state_for(branch)) for p in plans
+        ]
+        if any(t is None for t in temps):
+            return self._host.bank_gate_block(
+                bank, exit_logits, expert_ids, branch
+            )
+        z = np.asarray(exit_logits)
+        expert_ids = np.asarray(expert_ids, np.int64)
+        # -1 (unknown -> default plan) maps onto the appended last slot
+        idx = np.where(expert_ids >= 0, expert_ids, len(keys))
+        t_vec = np.asarray(temps, np.float32)[idx][:, None]
+        conf, pred = self._stats_fn()(z, t_vec)
+        return np.asarray(conf, np.float64), np.asarray(pred, np.int64)
+
+    # ------------------------------------------------------ window level
+    def as_table(self, array):
+        import jax.numpy as jnp
+
+        return jnp.asarray(array)
+
+    def _pad(self, *cols):
+        n = len(cols[0])
+        m = _next_pow2(n)
+        if m == n:
+            return cols, n
+        return tuple(
+            np.concatenate([c, np.zeros(m - n, dtype=np.asarray(c).dtype)])
+            for c in cols
+        ), n
+
+    def window_gate(self, conf_table, pred_table, ctx_ids, samples,
+                    branch_idx, p_tar):
+        n = len(ctx_ids)
+        if n == 0:
+            return (np.empty(0), np.empty(0, np.int64),
+                    np.empty(0, bool))
+        (ctx, smp), _ = self._pad(np.asarray(ctx_ids, np.int64),
+                                  np.asarray(samples, np.int64))
+        conf, pred, on = self._gather_fn()(
+            conf_table, pred_table, ctx, np.int64(branch_idx), smp,
+            np.float32(p_tar),
+        )
+        return (np.asarray(conf, np.float64)[:n],
+                np.asarray(pred, np.int64)[:n],
+                np.asarray(on, bool)[:n])
+
+    def window_gate_cells(self, conf_table, pred_table, ctx_ids, samples,
+                          cell_ids, branch_idx_by_cell, p_tar_by_cell,
+                          n_cells):
+        n = len(ctx_ids)
+        if n == 0:
+            zero = np.zeros(n_cells, np.int64)
+            return {
+                "confidence": np.empty(0),
+                "prediction": np.empty(0, np.int64),
+                "on_device": np.empty(0, bool),
+                "on_count": zero,
+                "offload_count": zero.copy(),
+            }
+        valid = np.ones(n, bool)
+        (ctx, smp, cells, valid), _ = self._pad(
+            np.asarray(ctx_ids, np.int64), np.asarray(samples, np.int64),
+            np.asarray(cell_ids, np.int64), valid,
+        )
+        conf, pred, on, on_count, off_count = self._cells_fn()(
+            conf_table, pred_table, ctx, smp, cells,
+            np.asarray(branch_idx_by_cell, np.int64),
+            np.asarray(p_tar_by_cell, np.float32), valid, int(n_cells),
+        )
+        return {
+            "confidence": np.asarray(conf, np.float64)[:n],
+            "prediction": np.asarray(pred, np.int64)[:n],
+            "on_device": np.asarray(on, bool)[:n],
+            "on_count": np.asarray(on_count, np.int64),
+            "offload_count": np.asarray(off_count, np.int64),
+        }
+
+
+# -------------------------------------------------------------- registry
+_GATE_BACKENDS: Dict[str, Callable[[], GateBackend]] = {
+    "numpy": NumpyGateBackend,
+    "jax": JaxGateBackend,
+}
+_INSTANCES: Dict[str, GateBackend] = {}
+
+
+def register_gate_backend(name: str, factory: Callable[[], GateBackend]) -> None:
+    _GATE_BACKENDS[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def available_gate_backends() -> List[str]:
+    return sorted(_GATE_BACKENDS)
+
+
+def get_gate_backend(backend=None) -> GateBackend:
+    """Resolve a backend instance from None (-> numpy), a registered
+    name, or an instance (passed through)."""
+    if backend is None:
+        backend = "numpy"
+    if isinstance(backend, GateBackend):
+        return backend
+    if backend not in _GATE_BACKENDS:
+        raise ValueError(
+            f"unknown gate backend {backend!r} "
+            f"(registered: {available_gate_backends()})"
+        )
+    if backend not in _INSTANCES:  # backends cache jitted fns: share them
+        _INSTANCES[backend] = _GATE_BACKENDS[backend]()
+    return _INSTANCES[backend]
+
+
+# ----------------------------------------------------- the dense gate table
+class GateTable:
+    """Precomputed per-(context, branch) gate blocks under per-sample
+    expert selection -- the fleet's batched analogue of the serving cores.
+
+    exit_logits_by_context: {context: {physical_branch: (N, C) logits}};
+    final_logits_by_context the matching cloud main heads. For the
+    non-drifting case pass ``{STATIC_CONTEXT: {...}}`` (or use
+    `GateTable.from_logits`).
+
+    plan_or_bank decides calibration exactly as in `ContextualLogitsCore`:
+    a single `OffloadPlan` applies one calibrator set everywhere; a
+    `PlanBank` picks each sample's expert -- via its embedded estimator on
+    `features_by_context` (the honest edge-side path; unknown verdicts
+    fall back to the default plan) or by the true context (oracle bound).
+
+    The precompute gathers, per (true context, branch), each sample's
+    confidence under ITS expert plan into one dense (n_ctx, n_branch, N)
+    array, so the runtime cost of a window is one fancy-index + compare.
+    Both the precompute and the window lookups route through the selected
+    `GateBackend` (``"numpy"`` default; ``"jax"`` keeps the tables
+    device-resident and gates a window in one compiled call).
+    """
+
+    def __init__(
+        self,
+        exit_logits_by_context: Dict[str, Dict[int, np.ndarray]],
+        final_logits_by_context: Dict[str, np.ndarray],
+        plan_or_bank,
+        labels: Optional[np.ndarray] = None,
+        features_by_context: Optional[Dict[str, np.ndarray]] = None,
+        backend=None,
+    ):
+        from repro.core.bank import PlanBank
+
+        self.backend = get_gate_backend(backend)
+        if isinstance(plan_or_bank, PlanBank):
+            self.bank: Optional[PlanBank] = plan_or_bank
+            self.plan = plan_or_bank.default_plan
+            criteria = {p.criterion for p in plan_or_bank.plans.values()}
+        else:
+            self.bank = None
+            self.plan = plan_or_bank
+            criteria = {plan_or_bank.criterion}
+        if criteria != {"confidence"}:
+            # every expert, not just the default: the ContextualLogitsCore
+            # contract, so the fleet cannot silently serve a bank the
+            # event runtime would reject
+            raise ValueError(
+                "the fleet gate thresholds the runtime's moving confidence "
+                f"target; plan criteria {sorted(criteria)} are not supported"
+            )
+        self.ctx_keys: List[str] = sorted(exit_logits_by_context)
+        self.ctx_index = {k: i for i, k in enumerate(self.ctx_keys)}
+        if set(final_logits_by_context) != set(self.ctx_keys):
+            raise ValueError("exit and final logits must cover the same contexts")
+        self.branches = sorted(next(iter(exit_logits_by_context.values())))
+        self._branch_index = {b: i for i, b in enumerate(self.branches)}
+        for ctx, per_branch in exit_logits_by_context.items():
+            if sorted(per_branch) != self.branches:
+                raise ValueError(f"context {ctx!r} covers different branches")
+        n = int(np.asarray(final_logits_by_context[self.ctx_keys[0]]).shape[0])
+        self.n_samples = n
+
+        # per-(ctx, sample) expert selection, as in ContextualLogitsCore:
+        # estimator verdicts on real features when available, oracle else
+        self._oracle = not (
+            self.bank is not None
+            and self.bank.estimator is not None
+            and features_by_context is not None
+        )
+        bank_keys = self.bank.contexts if self.bank is not None else []
+        # est ids index into bank_keys; -1 = unknown verdict; whole array
+        # None in oracle mode (no estimator to report in telemetry)
+        self._est_ids: Optional[np.ndarray] = None
+        if not self._oracle:
+            est = self.bank.estimator
+            est_ids = np.empty((len(self.ctx_keys), n), np.int64)
+            key_to_bank = {k: i for i, k in enumerate(bank_keys)}
+            est_to_bank = np.asarray(
+                [key_to_bank[k] for k in est.contexts], np.int64
+            )
+            for ci, ctx in enumerate(self.ctx_keys):
+                if ctx not in features_by_context:
+                    raise ValueError(f"no features for context {ctx!r}")
+                ids = est.predict_ids(features_by_context[ctx])
+                est_ids[ci] = np.where(ids >= 0, est_to_bank[ids], -1)
+            self._est_ids = est_ids
+
+        self.conf = np.empty((len(self.ctx_keys), len(self.branches), n))
+        self.pred = np.empty_like(self.conf, dtype=np.int64)
+        for ci, ctx in enumerate(self.ctx_keys):
+            for bi, b in enumerate(self.branches):
+                z = np.asarray(exit_logits_by_context[ctx][b])
+                if self.bank is None:
+                    c, p = self.backend.plan_gate_block(
+                        self.plan, z, branch=b - 1
+                    )
+                elif self._oracle:
+                    eids = np.full(
+                        n, bank_keys.index(ctx) if ctx in bank_keys else -1,
+                        np.int64,
+                    )
+                    c, p = self.backend.bank_gate_block(
+                        self.bank, z, eids, branch=b - 1
+                    )
+                else:
+                    c, p = self.backend.bank_gate_block(
+                        self.bank, z, self._est_ids[ci], branch=b - 1
+                    )
+                self.conf[ci, bi], self.pred[ci, bi] = c, p
+        self.final_pred = np.stack(
+            [
+                np.argmax(np.asarray(final_logits_by_context[k]), axis=-1)
+                for k in self.ctx_keys
+            ]
+        ).astype(np.int64)
+        self.labels = None if labels is None else np.asarray(labels, np.int64)
+        self.bank_keys = bank_keys
+        # backend-resident views (device arrays for the jax backend) used
+        # by the window lookups; host numpy stays the source of truth
+        self._conf_t = self.backend.as_table(self.conf)
+        self._pred_t = self.backend.as_table(self.pred)
+
+    @classmethod
+    def from_logits(
+        cls,
+        exit_logits: Dict[int, np.ndarray],
+        final_logits: np.ndarray,
+        plan,
+        labels: Optional[np.ndarray] = None,
+        backend=None,
+    ) -> "GateTable":
+        """Non-drifting table over one logit set (the `LogitsCore` case)."""
+        return cls({STATIC_CONTEXT: exit_logits}, {STATIC_CONTEXT: final_logits},
+                   plan, labels=labels, backend=backend)
+
+    # ------------------------------------------------------- window lookups
+    def branch_idx(self, branch: int) -> int:
+        if branch not in self._branch_index:
+            raise ValueError(
+                f"branch {branch} not served (table covers {self.branches})"
+            )
+        return self._branch_index[branch]
+
+    def gate(self, ctx_ids: np.ndarray, samples: np.ndarray, branch: int):
+        """-> (confidence, edge prediction) for a whole window."""
+        bi = self.branch_idx(branch)
+        return self.conf[ctx_ids, bi, samples], self.pred[ctx_ids, bi, samples]
+
+    def gate_window(
+        self, ctx_ids: np.ndarray, samples: np.ndarray, branch: int,
+        p_tar: float,
+    ):
+        """-> (confidence, prediction, on_device) through the backend --
+        what the fleet simulator thresholds per (cell, window)."""
+        return self.backend.window_gate(
+            self._conf_t, self._pred_t, ctx_ids, samples,
+            self.branch_idx(branch), p_tar,
+        )
+
+    def gate_window_cells(
+        self, ctx_ids, samples, cell_ids, branch_by_cell, p_tar_by_cell,
+        n_cells: int,
+    ):
+        """Whole-fleet window in one backend call (+ per-cell on/offload
+        segment counts); `branch_by_cell` holds PHYSICAL branch numbers."""
+        bi = np.asarray([self.branch_idx(int(b)) for b in branch_by_cell],
+                        np.int64)
+        return self.backend.window_gate_cells(
+            self._conf_t, self._pred_t, ctx_ids, samples, cell_ids, bi,
+            np.asarray(p_tar_by_cell, np.float64), n_cells,
+        )
+
+    def cloud_pred(self, ctx_ids: np.ndarray, samples: np.ndarray) -> np.ndarray:
+        return self.final_pred[ctx_ids, samples]
+
+    def est_ids(self, ctx_ids: np.ndarray, samples: np.ndarray) -> Optional[np.ndarray]:
+        """Estimator verdicts (indices into `bank_keys`, -1 unknown) for a
+        window; None when selection is oracle/single-plan."""
+        if self._est_ids is None:
+            return None
+        return self._est_ids[ctx_ids, samples]
+
+    def correct(self, samples: np.ndarray, preds: np.ndarray) -> Optional[np.ndarray]:
+        if self.labels is None:
+            return None
+        return self.labels[samples] == preds

@@ -101,7 +101,8 @@ class OffloadPlan:
             use_kernel=use_kernel,
         )
 
-    def gate_block(self, exit_logits, branch: Optional[int] = None):
+    def gate_block(self, exit_logits, branch: Optional[int] = None,
+                   backend=None):
         """Batched gate statistics for a whole logit block -> numpy
         (confidence float64, prediction int64) of shape (N,).
 
@@ -109,11 +110,14 @@ class OffloadPlan:
         calibrated logits, so fleet-scale consumers agree bit-for-bit with
         the per-request serving cores), returned as host arrays ready for
         vectorized thresholding `conf >= p_tar` over the whole block.
+        `backend` selects the execution path (`repro.core.gatepath`): None
+        -> the default host numpy backend; ``"jax"`` -> one jitted call.
         """
-        from repro.core.exits import gate_statistics
+        from repro.core.gatepath import get_gate_backend
 
-        conf, pred, _ = gate_statistics(self.calibrated_logits(exit_logits, branch))
-        return np.asarray(conf, np.float64), np.asarray(pred, np.int64)
+        return get_gate_backend(backend).plan_gate_block(
+            self, exit_logits, branch=branch
+        )
 
     def _copy(self, **overrides) -> "OffloadPlan":
         """Fresh OffloadPlan (never the OffloadPolicy shim subclass, whose
@@ -232,134 +236,11 @@ def make_plan(
 
 
 # ----------------------------------------------------- online re-scoring
-def rescore_plan(
-    plan: OffloadPlan,
-    exit_logits_list,
-    edge_times_s: Sequence[float],
-    cloud_times_s: Sequence[float],
-    payload_bytes: Sequence[int],
-    uplink_bps: float,
-    labels=None,
-    final_logits=None,
-    p_tar_grid: Optional[Sequence[float]] = None,
-    min_accuracy: Optional[float] = None,
-    exit_layer_indices: Optional[Sequence[int]] = None,
-    arrival_rate_hz: Optional[float] = None,
-    exit_stats: Optional[Sequence] = None,
-    sample_weight=None,
-):
-    """Re-select (deployed exit, effective p_tar) under CURRENT conditions.
-
-    Edgent-style adaptation: the plan's fitted per-exit calibrators are
-    re-used as-is (no re-fitting); only the offload probability and the
-    expected-latency objective are re-evaluated at the measured
-    `uplink_bps`. With `labels` and `final_logits`, each candidate's
-    end-to-end accuracy (on-device samples by the exit head, offloaded
-    samples by the cloud main head) is computed and candidates below
-    `min_accuracy` are rejected; if none qualify, the most accurate
-    candidate wins regardless of latency.
-
-    `arrival_rate_hz` (fleet-wide, for a SHARED uplink) adds an M/M/1-style
-    busy-ratio correction: a candidate whose offloads would load the link
-    at utilization rho sees its comm term scaled by 1/(1-rho), capped at
-    100x past saturation -- without it, the open-loop objective happily
-    picks configurations whose offload traffic exceeds link capacity.
-
-    `exit_stats` skips the calibrate+softmax pass: a list of per-exit
-    (confidence, prediction) arrays already computed with this plan's
-    calibrators (they don't change between re-scores, so a periodic
-    controller computes them once and passes them every tick).
-
-    `sample_weight` (length-N, renormalized internally) weights the
-    validation samples when computing each candidate's offload probability
-    and accuracy. This is how a context-aware controller re-scores under
-    input drift: concatenate per-context validation logits and weight each
-    context's block by its estimated share of recent traffic, so the
-    candidate table prices the traffic mix actually being served rather
-    than the clean distribution (see `repro.fleet.controller`).
-
-    Returns (new_plan, table): new_plan carries the winning exit_index and
-    p_tar; table lists every candidate as a dict, best first.
-    """
-    import numpy as np
-
-    from repro.core.exits import gate_statistics
-    from repro.core.partition import expected_latency
-
-    if plan.criterion != "confidence":
-        raise ValueError(
-            "rescore_plan moves the confidence target p_tar; an "
-            f"{plan.criterion!r}-criterion plan has nothing to re-score"
-        )
-    if min_accuracy is not None and (labels is None or final_logits is None):
-        raise ValueError(
-            "min_accuracy needs labels and final_logits to evaluate "
-            "candidate accuracy"
-        )
-    grid = [plan.p_tar] if p_tar_grid is None else list(p_tar_grid)
-    y = None if labels is None else np.asarray(labels)
-    final_correct = None
-    if final_logits is not None and y is not None:
-        final_correct = np.argmax(np.asarray(final_logits), axis=-1) == y
-    w = None
-    if sample_weight is not None:
-        w = np.asarray(sample_weight, np.float64)
-        if w.ndim != 1 or np.any(w < 0) or w.sum() <= 0:
-            raise ValueError("sample_weight must be 1-D, non-negative, sum > 0")
-    table = []
-    for i, z in enumerate(exit_logits_list):
-        if exit_stats is not None:
-            conf, pred = exit_stats[i]
-        else:
-            conf, pred, _ = gate_statistics(plan.calibrated_logits(z, i))
-        conf, pred = np.asarray(conf), np.asarray(pred)
-        exit_correct = None if y is None else pred == y
-        for p in grid:
-            on = conf >= p
-            offload_prob = float(np.average(~on, weights=w))
-            comm = payload_bytes[i] * 8.0 / uplink_bps
-            utilization = (
-                arrival_rate_hz * offload_prob * comm
-                if arrival_rate_hz is not None
-                else 0.0
-            )
-            wait_factor = 1.0 / max(1.0 - utilization, 1e-2)
-            lat = expected_latency(
-                edge_times_s[i], cloud_times_s[i], payload_bytes[i],
-                offload_prob, uplink_bps, comm_wait_factor=wait_factor,
-            )
-            acc = None
-            if exit_correct is not None and final_correct is not None:
-                acc = float(np.average(np.where(on, exit_correct, final_correct),
-                                       weights=w))
-            table.append(
-                dict(
-                    exit_index=i,
-                    p_tar=float(p),
-                    offload_prob=offload_prob,
-                    expected_latency_s=lat,
-                    uplink_utilization=utilization,
-                    accuracy=acc,
-                )
-            )
-    feasible = [
-        r for r in table
-        if min_accuracy is None
-        or (r["accuracy"] is not None and r["accuracy"] >= min_accuracy)
-    ]
-    if feasible:
-        best = min(feasible, key=lambda r: r["expected_latency_s"])
-    else:  # nothing meets the floor: degrade gracefully to most accurate
-        best = max(table, key=lambda r: (r["accuracy"] or 0.0))
-    table = sorted(table, key=lambda r: r["expected_latency_s"])
-    if exit_layer_indices is not None:
-        layer = exit_layer_indices[best["exit_index"]]
-    elif best["exit_index"] == plan.exit_index:
-        layer = plan.partition_layer
-    else:  # exit moved and we don't know its layer: don't keep a stale one
-        layer = None
-    new_plan = plan.with_partition(best["exit_index"], layer).with_p_tar(best["p_tar"])
-    return new_plan, table
+# rescore_plan moved to `repro.core.control` (the shared controller core);
+# this import keeps the long-standing `repro.core.policy.rescore_plan`
+# call sites working. It sits below the class definitions so the control
+# module can be imported first without a cycle.
+from repro.core.control import rescore_plan  # noqa: E402
 
 
 # ------------------------------------------------------- deprecation shims

@@ -14,31 +14,45 @@ the single-cell, single-device, fixed-link limit (pinned by
 * `topology`   -- `CellConfig`/`FleetTopology`: C cells, each with its
                   own device group, shared uplink (`NetworkModel`), drift
                   schedule, and workload, all feeding one cloud tier;
-* `gate`       -- `FleetGateTable`: per-(context, expert, branch)
-                  confidence/prediction blocks precomputed through the
-                  batched `OffloadPlan.gate_block`/`PlanBank.gate_block`
-                  path, with integer context ids for fancy indexing;
+* `gate`       -- a shim over `repro.core.gatepath.GateTable` (the
+                  name `FleetGateTable` remains): per-(context, expert,
+                  branch) confidence/prediction blocks precomputed and
+                  window-gated through the selectable `GateBackend`
+                  (host numpy or one jitted JAX call per window);
 * `simulator`  -- `FleetSimulator`: the time-stepped vectorized pipeline
                   (edge FIFO recurrences, per-cell uplink queue, shared
                   multi-server cloud), all O(window) numpy;
-* `controller` -- `FleetController`: per-cell Edgent-style re-scoring of
-                  (branch, p_tar) from windowed per-cell telemetry, with
-                  a shared-cloud utilization cap across cells;
+* `controller` -- `FleetController`: fleet policy over the shared
+                  `repro.core.control.ControllerCore` (per-cell
+                  context-aware re-scoring from windowed telemetry,
+                  distress-gated p_tar concession) plus the fleet-only
+                  shared-cloud utilization cap across cells;
 * `telemetry`  -- `FleetTelemetry`: per-cell and fleet-wide p50/p95/p99,
                   miss rate, offload rate, and miscalibration gap, sharing
                   the metric definitions of `repro.serving.telemetry`;
 * `scenarios`  -- the reference multi-cell drift scenario the acceptance
                   tests and `BENCH_fleet.json` both run.
 """
+from repro.core.gatepath import GateBackend, GateTable, get_gate_backend
 from repro.fleet.controller import FleetController, FleetControllerConfig
 from repro.fleet.gate import FleetGateTable
 from repro.fleet.simulator import FleetConfig, FleetSimulator
 from repro.fleet.telemetry import FleetTelemetry
-from repro.fleet.topology import CellConfig, FleetTopology
+from repro.fleet.topology import (
+    CellConfig,
+    DiurnalEnvelope,
+    FleetTopology,
+    poisson_cell_workload,
+)
 
 __all__ = [
     "CellConfig",
+    "DiurnalEnvelope",
     "FleetTopology",
+    "poisson_cell_workload",
+    "GateBackend",
+    "GateTable",
+    "get_gate_backend",
     "FleetGateTable",
     "FleetConfig",
     "FleetSimulator",

@@ -1,14 +1,16 @@
-"""Fleet-level offload controller.
+"""Fleet-level offload controller: fleet policy over the shared core.
 
-`repro.serving.controller.OnlineController` re-scores ONE cell's deployed
-(branch, p_tar) against its measured uplink. At fleet scale two things
-change: every cell sees a different link and arrival rate, and all cells
-share one cloud tier -- a re-score that is locally optimal per cell can
+The candidate-table construction, mix-weighted context-aware re-scoring,
+feasibility rules, and the distress-gated p_tar concession all live in
+`repro.core.control` and are shared with the event runtime's
+`OnlineController`. What remains here is genuinely fleet-scale policy:
+every cell sees a different link and arrival rate, and all cells share
+one cloud tier -- a re-score that is locally optimal per cell can
 collectively saturate the cloud. `FleetController` therefore runs the
-same Edgent-style `rescore_plan` per cell (same calibrators, same
-candidate table, per-cell measured bandwidth/arrivals from the windowed
-fleet telemetry) and then applies a shared-cloud pass: while the
-aggregate cloud utilization
+shared re-score per cell (same calibrators, same candidate table,
+per-cell measured bandwidth/arrivals/traffic mix from the windowed fleet
+telemetry) and then applies a shared-cloud pass: while the aggregate
+cloud utilization
 
     rho = sum_c arrival_c * offload_prob_c * cloud_time(branch_c) / K
 
@@ -20,28 +22,30 @@ single-cell controller's cold-start rule.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.policy import rescore_plan
+from repro.core.control import (
+    ControlConfig,
+    ControllerCore,
+    choose_with_concession,
+    row_feasible,
+)
 from repro.offload import latency as L
 
 
 @dataclass
-class FleetControllerConfig:
-    interval_s: float = 1.0  # re-score cadence (must be a multiple of window_s)
-    window_s: float = 2.0  # trailing telemetry window per cell
-    p_tar_grid: Optional[Sequence[float]] = None  # None = keep the plan's
-    min_accuracy: Optional[float] = None  # accuracy floor for candidates
-    utilization_aware: bool = True  # per-cell M/M/1 uplink correction
+class FleetControllerConfig(ControlConfig):
+    """The shared control knobs (`repro.core.control.ControlConfig`) plus
+    the shared-cloud utilization cap. The concession threshold
+    ``distress_utilization`` is inherited: a cell holds the PLAN's p_tar
+    (moving only its branch) while any candidate at full p_tar keeps its
+    uplink stable, and otherwise makes the WEAKEST concession -- the
+    highest p_tar whose offload traffic fits the measured link -- rather
+    than the latency-greedy one."""
+
     cloud_rho_max: Optional[float] = 0.9  # shared-cloud utilization cap
-    distress_utilization: float = 0.95  # uplink rho above which a cell may
-    # concede p_tar: the reliability target is the operator's contract, so a
-    # cell holds the PLAN's p_tar (moving only its branch) while any
-    # candidate at full p_tar keeps its uplink stable, and otherwise makes
-    # the WEAKEST concession -- the highest p_tar whose offload traffic
-    # fits the measured link -- rather than the latency-greedy one
 
 
 class FleetController:
@@ -54,17 +58,18 @@ class FleetController:
     event runtime. ``cloud_servers`` is the shared tier's parallelism --
     the denominator of the utilization cap.
 
-    `exit_logits` is either ``{branch: (N, C)}`` -- the single-cell
-    controller's context-blind stats -- or ``{context: {branch: (N, C)}}``
-    with matching `final_logits` per context, which makes the re-score
-    CONTEXT-AWARE: each tick, every cell's candidate table is computed
-    with the validation samples weighted by that cell's estimated traffic
-    mix over the trailing window (`FleetTelemetry.context_mix_estimate`),
-    so offload probabilities and accuracies price the drifting inputs the
+    `exit_logits` is either ``{branch: (N, C)}`` -- the context-blind
+    form -- or ``{context: {branch: (N, C)}}`` with matching
+    `final_logits` per context, which makes the re-score CONTEXT-AWARE:
+    each tick, every cell's candidate table is computed with the
+    validation samples weighted by that cell's estimated traffic mix over
+    the trailing window (`FleetTelemetry.context_mix_estimate`), so
+    offload probabilities and accuracies price the drifting inputs the
     cell is actually serving. A context-blind controller under drift can
     badly underestimate a candidate's offload traffic (clean inputs gate
     confidently; distorted ones do not) and leave a distressed cell
-    saturated -- the ROADMAP's "context-aware controller" item.
+    saturated -- the rescoring the event runtime's `OnlineController`
+    now shares.
     """
 
     def __init__(
@@ -79,153 +84,52 @@ class FleetController:
         config: Optional[FleetControllerConfig] = None,
         payload_nbytes=None,
     ):
-        from repro.core.bank import PlanBank
-
-        if isinstance(plan, PlanBank):
-            plan = plan.default_plan
-        if plan.criterion != "confidence":
-            raise ValueError(
-                "FleetController re-scores the confidence target p_tar; "
-                f"{plan.criterion!r}-criterion plans are not re-scorable"
-            )
-        self.plan = plan
+        self.core = ControllerCore(
+            plan, profile, exit_logits,
+            final_logits=final_logits, labels=labels,
+            payload_nbytes=payload_nbytes,
+        )
+        self.plan = self.core.plan
         self.profile = profile
         self.n_cells = n_cells
         self.cloud_servers = cloud_servers
         self.config = config or FleetControllerConfig()
         if (
             self.config.p_tar_grid is not None
-            and plan.p_tar not in self.config.p_tar_grid
+            and self.plan.p_tar not in self.config.p_tar_grid
         ):
-            # the contract-holding stage of _choose_cell matches rows at
-            # the PLAN's p_tar; a grid omitting it would silently treat
-            # every cell as distressed, so always keep it available
+            # the contract-holding stage of choose_with_concession matches
+            # rows at the PLAN's p_tar; a grid omitting it would silently
+            # treat every cell as distressed, so always keep it available
             self.config = FleetControllerConfig(
                 **{**self.config.__dict__,
-                   "p_tar_grid": tuple(self.config.p_tar_grid) + (plan.p_tar,)}
+                   "p_tar_grid": tuple(self.config.p_tar_grid)
+                   + (self.plan.p_tar,)}
             )
-
-        # normalize to {context: {branch: logits}}; None key = context-blind
-        if all(isinstance(k, str) for k in exit_logits):
-            by_ctx = {k: exit_logits[k] for k in sorted(exit_logits)}
-            if final_logits is not None and not isinstance(final_logits, dict):
-                raise ValueError(
-                    "per-context exit_logits need per-context final_logits"
-                )
-            final_by_ctx = final_logits
-        else:
-            by_ctx = {None: exit_logits}
-            final_by_ctx = None if final_logits is None else {None: final_logits}
-        self.ctx_keys = list(by_ctx)
-        first = next(iter(by_ctx.values()))
-        self.branches = sorted(first)
-        if self.branches != list(range(1, len(self.branches) + 1)):
-            raise ValueError(
-                "exit_logits keys must be contiguous physical branches 1..K; "
-                f"got {self.branches}"
-            )
-        for ctx, per_branch in by_ctx.items():
-            if sorted(per_branch) != self.branches:
-                raise ValueError(f"context {ctx!r} covers different branches")
-
-        self.labels = None if labels is None else np.asarray(labels)
-        if payload_nbytes is None:
-            from repro.models.convnet import payload_bytes
-
-            payload_nbytes = payload_bytes
-        self.payload_bytes = [payload_nbytes(b) for b in self.branches]
-        self.edge_times_s = [L.edge_time(profile, b) for b in self.branches]
-        self.cloud_times_s = [L.cloud_time(profile, b) for b in self.branches]
-
-        # calibrated (conf, pred) never change between ticks: compute once
-        # per (context, branch), concatenated in ctx_keys order so a tick
-        # only supplies per-sample weights
-        self._block_len = [len(next(iter(by_ctx[k].values()))) for k in self.ctx_keys]
-        self.exit_logits_list = [
-            np.concatenate([np.asarray(by_ctx[k][b]) for k in self.ctx_keys])
-            for b in self.branches
-        ]
-        self._exit_stats = []
-        for bi, b in enumerate(self.branches):
-            stats = [plan.gate_block(by_ctx[k][b], branch=bi) for k in self.ctx_keys]
-            self._exit_stats.append(
-                (np.concatenate([c for c, _ in stats]),
-                 np.concatenate([p for _, p in stats]))
-            )
-        if self.labels is not None:
-            self._labels_cat = np.concatenate(
-                [self.labels for _ in self.ctx_keys]
-            )
-        else:
-            self._labels_cat = None
-        if final_by_ctx is not None:
-            missing = set(self.ctx_keys) - set(final_by_ctx)
-            if missing:
-                raise ValueError(f"final_logits missing contexts {sorted(missing)}")
-            self._final_cat = np.concatenate(
-                [np.asarray(final_by_ctx[k]) for k in self.ctx_keys]
-            )
-        else:
-            self._final_cat = None
         self.history: List[Tuple[float, List[Tuple[int, float]]]] = []
+
+    @property
+    def branches(self) -> List[int]:
+        return self.core.branches
+
+    @property
+    def ctx_keys(self) -> List[Optional[str]]:
+        return self.core.ctx_keys
 
     @property
     def interval_s(self) -> float:
         return self.config.interval_s
 
     # ------------------------------------------------------------- update
-    def _feasible(self, row) -> bool:
-        floor = self.config.min_accuracy
-        return floor is None or (
-            row["accuracy"] is not None and row["accuracy"] >= floor
-        )
-
-    def _choose_cell(self, table) -> dict:
-        """Pick one cell's row from its re-scored candidate table.
-
-        1. If an accuracy-feasible candidate at the PLAN's p_tar keeps the
-           uplink under the distress threshold, take the fastest such row
-           (the branch is the only knob, as in the single-cell scenario).
-        2. Otherwise the link cannot carry full-p_tar traffic: make the
-           weakest reliability concession -- among stable feasible rows,
-           the highest p_tar, fastest within it.
-        3. No stable row at all: fastest feasible; no feasible row: most
-           accurate (the `rescore_plan` degradation rule).
-        """
-        rho = self.config.distress_utilization
-        feasible = [r for r in table if self._feasible(r)]
-        full = [
-            r for r in feasible
-            if r["p_tar"] == self.plan.p_tar and r["uplink_utilization"] < rho
-        ]
-        if full:
-            return min(full, key=lambda r: r["expected_latency_s"])
-        stable = [r for r in feasible if r["uplink_utilization"] < rho]
-        if stable:
-            return min(stable, key=lambda r: (-r["p_tar"], r["expected_latency_s"]))
-        if feasible:
-            return min(feasible, key=lambda r: r["expected_latency_s"])
-        return max(table, key=lambda r: (r["accuracy"] or 0.0))
-
-    def _cell_weights(self, telemetry, c: int, t: float) -> Optional[np.ndarray]:
-        """Per-sample weights pricing this cell's estimated traffic mix;
-        None (uniform over all contexts' samples) when context-blind or
-        nothing recognizable was observed yet."""
-        if len(self.ctx_keys) == 1:
+    def _cell_mix(self, telemetry, c: int, t: float) -> Optional[Dict[str, float]]:
+        """This cell's trailing-window traffic mix as {context: share};
+        None when context-blind or nothing recognizable was observed."""
+        if not self.core.context_aware:
             return None
         raw = telemetry.context_mix_estimate(c, self.config.window_s, now=t)
         if raw is None:
             return None
-        mix = np.zeros(len(self.ctx_keys))
-        for i, key in enumerate(telemetry.context_keys):
-            if key in self.ctx_keys:
-                mix[self.ctx_keys.index(key)] += raw[i]
-        if mix.sum() <= 0:
-            return None
-        mix /= mix.sum()
-        return np.concatenate(
-            [np.full(n, m / n) for n, m in zip(self._block_len, mix)]
-        )
+        return dict(zip(telemetry.context_keys, np.asarray(raw, np.float64)))
 
     def update(self, t: float, telemetry) -> List[Tuple[int, float]]:
         """-> per-cell (physical branch, p_tar) decisions."""
@@ -240,22 +144,24 @@ class FleetController:
                 if cfg.utilization_aware
                 else None
             )
-            _, table = rescore_plan(
+            _, table = self.core.rescore(
                 self.plan,
-                self.exit_logits_list,
-                edge_times_s=self.edge_times_s,
-                cloud_times_s=self.cloud_times_s,
-                payload_bytes=self.payload_bytes,
                 uplink_bps=bw,
-                labels=self._labels_cat,
-                final_logits=self._final_cat,
+                arrival_rate_hz=rate_hz,
                 p_tar_grid=cfg.p_tar_grid,
                 min_accuracy=cfg.min_accuracy,
-                arrival_rate_hz=rate_hz,
-                exit_stats=self._exit_stats,
-                sample_weight=self._cell_weights(telemetry, c, t),
+                max_reliability_gap=cfg.max_reliability_gap,
+                sample_weight=self.core.sample_weight_for_mix(
+                    self._cell_mix(telemetry, c, t)
+                ),
             )
-            chosen_rows.append(self._choose_cell(table))
+            chosen_rows.append(
+                choose_with_concession(
+                    table, self.plan.p_tar, cfg.distress_utilization,
+                    min_accuracy=cfg.min_accuracy,
+                    max_reliability_gap=cfg.max_reliability_gap,
+                )
+            )
             tables.append(table)
             rates.append(rate_hz or 0.0)
 
@@ -269,8 +175,16 @@ class FleetController:
         return decisions
 
     # ---------------------------------------------------- shared-cloud cap
+    def _feasible(self, row) -> bool:
+        return row_feasible(
+            row, self.config.min_accuracy, self.config.max_reliability_gap
+        )
+
     def _cloud_load(self, row, rate_hz: float) -> float:
-        return rate_hz * row["offload_prob"] * self.cloud_times_s[row["exit_index"]]
+        return (
+            rate_hz * row["offload_prob"]
+            * self.core.cloud_times_s[row["exit_index"]]
+        )
 
     def _shared_cloud_pass(self, chosen, tables, rates):
         """Demote the heaviest cloud contributors until the shared tier's

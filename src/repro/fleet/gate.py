@@ -1,177 +1,23 @@
-"""Batched gate evaluation for the fleet simulator.
+"""Deprecation shim: the batched fleet gate moved into the control plane.
 
-`FleetGateTable` is the vectorized analogue of the serving cores
-(`LogitsCore` / `ContextualLogitsCore`): the same per-(context, expert,
-branch) confidence/prediction precompute, stored as dense stacked arrays
-indexed by integer context ids so a whole event window gates with one
-fancy-indexing expression instead of one Python call per request.
-
-All gate math goes through the batched `OffloadPlan.gate_block` /
-`PlanBank.gate_block` path (i.e. the existing calibrator states and
-`gate_statistics`), so fleet decisions agree bit-for-bit with the
-event-driven runtime on the same logits -- the equivalence the
-single-cell limit tests pin down.
+`FleetGateTable` grew into the repo-wide dense gate table and now lives
+in `repro.core.gatepath` as `GateTable`, where it routes both its
+precompute and its window lookups through the selectable `GateBackend`
+(host numpy or jitted JAX). This module keeps the long-standing
+``repro.fleet.gate`` imports working; new code should import
+`repro.core.gatepath.GateTable` (or `repro.fleet.FleetGateTable`, which
+re-exports the same class).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from repro.core.gatepath import (  # noqa: F401
+    GateBackend,
+    GateTable,
+    JaxGateBackend,
+    NumpyGateBackend,
+    STATIC_CONTEXT,
+    get_gate_backend,
+)
 
-import numpy as np
-
-from repro.core.bank import PlanBank
-from repro.core.policy import OffloadPlan
-
-#: context id used when a core has no drift axis (plain logits, no schedule)
-STATIC_CONTEXT = "__all__"
-
-
-class FleetGateTable:
-    """Precomputed per-(context, branch) gate blocks under per-sample
-    expert selection.
-
-    exit_logits_by_context: {context: {physical_branch: (N, C) logits}};
-    final_logits_by_context the matching cloud main heads. For the
-    non-drifting case pass ``{STATIC_CONTEXT: {...}}`` (or use
-    `FleetGateTable.from_logits`).
-
-    plan_or_bank decides calibration exactly as in `ContextualLogitsCore`:
-    a single `OffloadPlan` applies one calibrator set everywhere; a
-    `PlanBank` picks each sample's expert -- via its embedded estimator on
-    `features_by_context` (the honest edge-side path; unknown verdicts
-    fall back to the default plan) or by the true context (oracle bound).
-
-    The precompute gathers, per (true context, branch), each sample's
-    confidence under ITS expert plan into one dense (n_ctx, n_branch, N)
-    array, so the runtime cost of a window is one fancy-index + compare.
-    """
-
-    def __init__(
-        self,
-        exit_logits_by_context: Dict[str, Dict[int, np.ndarray]],
-        final_logits_by_context: Dict[str, np.ndarray],
-        plan_or_bank,
-        labels: Optional[np.ndarray] = None,
-        features_by_context: Optional[Dict[str, np.ndarray]] = None,
-    ):
-        if isinstance(plan_or_bank, PlanBank):
-            self.bank: Optional[PlanBank] = plan_or_bank
-            self.plan = plan_or_bank.default_plan
-            criteria = {p.criterion for p in plan_or_bank.plans.values()}
-        else:
-            self.bank = None
-            self.plan = plan_or_bank
-            criteria = {plan_or_bank.criterion}
-        if criteria != {"confidence"}:
-            # every expert, not just the default: the ContextualLogitsCore
-            # contract, so the fleet cannot silently serve a bank the
-            # event runtime would reject
-            raise ValueError(
-                "the fleet gate thresholds the runtime's moving confidence "
-                f"target; plan criteria {sorted(criteria)} are not supported"
-            )
-        self.ctx_keys: List[str] = sorted(exit_logits_by_context)
-        self.ctx_index = {k: i for i, k in enumerate(self.ctx_keys)}
-        if set(final_logits_by_context) != set(self.ctx_keys):
-            raise ValueError("exit and final logits must cover the same contexts")
-        self.branches = sorted(next(iter(exit_logits_by_context.values())))
-        self._branch_index = {b: i for i, b in enumerate(self.branches)}
-        for ctx, per_branch in exit_logits_by_context.items():
-            if sorted(per_branch) != self.branches:
-                raise ValueError(f"context {ctx!r} covers different branches")
-        n = int(np.asarray(final_logits_by_context[self.ctx_keys[0]]).shape[0])
-        self.n_samples = n
-
-        # per-(ctx, sample) expert selection, as in ContextualLogitsCore:
-        # estimator verdicts on real features when available, oracle else
-        self._oracle = not (
-            self.bank is not None
-            and self.bank.estimator is not None
-            and features_by_context is not None
-        )
-        bank_keys = self.bank.contexts if self.bank is not None else []
-        # est ids index into bank_keys; -1 = unknown verdict; whole array
-        # None in oracle mode (no estimator to report in telemetry)
-        self._est_ids: Optional[np.ndarray] = None
-        if not self._oracle:
-            est = self.bank.estimator
-            est_ids = np.empty((len(self.ctx_keys), n), np.int64)
-            key_to_bank = {k: i for i, k in enumerate(bank_keys)}
-            est_to_bank = np.asarray(
-                [key_to_bank[k] for k in est.contexts], np.int64
-            )
-            for ci, ctx in enumerate(self.ctx_keys):
-                if ctx not in features_by_context:
-                    raise ValueError(f"no features for context {ctx!r}")
-                ids = est.predict_ids(features_by_context[ctx])
-                est_ids[ci] = np.where(ids >= 0, est_to_bank[ids], -1)
-            self._est_ids = est_ids
-
-        self.conf = np.empty((len(self.ctx_keys), len(self.branches), n))
-        self.pred = np.empty_like(self.conf, dtype=np.int64)
-        for ci, ctx in enumerate(self.ctx_keys):
-            for bi, b in enumerate(self.branches):
-                z = np.asarray(exit_logits_by_context[ctx][b])
-                if self.bank is None:
-                    c, p = self.plan.gate_block(z, branch=b - 1)
-                    eids = None
-                elif self._oracle:
-                    eids = np.full(
-                        n, bank_keys.index(ctx) if ctx in bank_keys else -1,
-                        np.int64,
-                    )
-                    c, p, _ = self.bank.gate_block(
-                        z, branch=b - 1, expert_ids=eids
-                    )
-                else:
-                    c, p, _ = self.bank.gate_block(
-                        z, branch=b - 1, expert_ids=self._est_ids[ci]
-                    )
-                self.conf[ci, bi], self.pred[ci, bi] = c, p
-        self.final_pred = np.stack(
-            [
-                np.argmax(np.asarray(final_logits_by_context[k]), axis=-1)
-                for k in self.ctx_keys
-            ]
-        ).astype(np.int64)
-        self.labels = None if labels is None else np.asarray(labels, np.int64)
-        self.bank_keys = bank_keys
-
-    @classmethod
-    def from_logits(
-        cls,
-        exit_logits: Dict[int, np.ndarray],
-        final_logits: np.ndarray,
-        plan: OffloadPlan,
-        labels: Optional[np.ndarray] = None,
-    ) -> "FleetGateTable":
-        """Non-drifting table over one logit set (the `LogitsCore` case)."""
-        return cls({STATIC_CONTEXT: exit_logits}, {STATIC_CONTEXT: final_logits},
-                   plan, labels=labels)
-
-    # ------------------------------------------------------- window lookups
-    def branch_idx(self, branch: int) -> int:
-        if branch not in self._branch_index:
-            raise ValueError(
-                f"branch {branch} not served (table covers {self.branches})"
-            )
-        return self._branch_index[branch]
-
-    def gate(self, ctx_ids: np.ndarray, samples: np.ndarray, branch: int):
-        """-> (confidence, edge prediction) for a whole window."""
-        bi = self.branch_idx(branch)
-        return self.conf[ctx_ids, bi, samples], self.pred[ctx_ids, bi, samples]
-
-    def cloud_pred(self, ctx_ids: np.ndarray, samples: np.ndarray) -> np.ndarray:
-        return self.final_pred[ctx_ids, samples]
-
-    def est_ids(self, ctx_ids: np.ndarray, samples: np.ndarray) -> Optional[np.ndarray]:
-        """Estimator verdicts (indices into `bank_keys`, -1 unknown) for a
-        window; None when selection is oracle/single-plan."""
-        if self._est_ids is None:
-            return None
-        return self._est_ids[ctx_ids, samples]
-
-    def correct(self, samples: np.ndarray, preds: np.ndarray) -> Optional[np.ndarray]:
-        if self.labels is None:
-            return None
-        return self.labels[samples] == preds
+#: Deprecated alias (the class itself -- isinstance checks keep working).
+FleetGateTable = GateTable

@@ -114,6 +114,7 @@ def run_fleet(
     window_s: float = 0.5,
     controller_config: Optional[FleetControllerConfig] = None,
     profile: Optional[L.LatencyProfile] = None,
+    backend=None,
 ) -> FleetTelemetry:
     """Serve the scenario's test split with a plan or expert bank.
 
@@ -121,13 +122,16 @@ def run_fleet(
     `with_controller` adds the fleet controller re-scoring every cell's
     (branch, p_tar) from its windowed telemetry under the shared cloud
     cap, fit on the CLEAN validation logits exactly as the single-cell
-    controller in `run_distortion_drift`.
+    controller in `run_distortion_drift`. `backend` selects the gate
+    execution path (`repro.core.gatepath`: host numpy default, or the
+    jitted ``"jax"`` window gate).
     """
     profile = profile or L.paper_2020()
     test, val = scenario.test, scenario.val
     table = FleetGateTable(
         test["exit_logits"], test["final"], plan_or_bank,
         labels=test["labels"], features_by_context=test.get("features"),
+        backend=backend,
     )
     controller = None
     if with_controller:

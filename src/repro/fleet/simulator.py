@@ -4,7 +4,7 @@ Instead of one heap event per arrival/gate/transfer, requests move
 through the tiers as whole *arrival windows* of numpy columns:
 
     per cell:  arrivals in [t0, t1)  ->  per-device FIFO edge service
-               -> batched gate (FleetGateTable fancy-indexing)
+               -> batched gate (GateTable through the selected backend)
                -> per-cell shared-uplink FIFO
     fleet:     all cells' transfers -> ONE cloud tier (K parallel servers)
 
@@ -39,7 +39,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.fleet.gate import FleetGateTable
+from repro.core.gatepath import GateTable
 from repro.fleet.telemetry import FleetTelemetry
 from repro.fleet.topology import FleetTopology
 from repro.offload import latency as L
@@ -92,16 +92,18 @@ class _CloudJobs:
 class FleetSimulator:
     """Run a whole fleet topology through the windowed pipeline.
 
-    table: the shared `FleetGateTable` (all cells serve the same model and
+    table: the shared `GateTable` (all cells serve the same model and
     deployed plan/bank; per-cell state is (branch, p_tar), moved by the
     optional fleet controller). Each cell's `ContextSchedule` must visit
     only contexts the table covers; cells without a schedule serve the
-    table's only context.
+    table's only context. The table's selected `GateBackend` decides how
+    each window gates (host numpy fancy-indexing, or one jitted JAX call
+    on device-resident tables).
     """
 
     def __init__(
         self,
-        table: FleetGateTable,
+        table: GateTable,
         topology: FleetTopology,
         profile: L.LatencyProfile,
         config: Optional[FleetConfig] = None,
@@ -273,8 +275,7 @@ class FleetSimulator:
             ctx_ids = self._sched_map[c][
                 cell.schedule.context_ids_at(edge_done)
             ]
-        conf, pred = self.table.gate(ctx_ids, samples, branch)
-        on = conf >= p_tar
+        conf, pred, on = self.table.gate_window(ctx_ids, samples, branch, p_tar)
         est = self.table.est_ids(ctx_ids, samples)
         correct = self.table.correct(samples, pred)
         n = hi - lo

@@ -5,9 +5,11 @@ bottleneck, so the fleet stores per-cell *columns* (numpy arrays appended
 once per window) and computes the same metrics the event-driven
 `Telemetry` defines -- p50/p95/p99 latency, deadline-miss rate, offload
 rate, accuracy, and the on-device-weighted miscalibration gap -- through
-the shared primitives in `repro.serving.telemetry`
-(`latency_stats_ms`, `on_device_gap`), so the two simulators can never
-disagree about what a metric means.
+the shared control-plane primitives in `repro.core.control`
+(`latency_stats_ms`, `on_device_gap`, and the windowed
+`windowed_mean`/`windowed_rate`/`windowed_mix` estimators), so the two
+simulators can never disagree about what a metric or a controller-facing
+estimate means.
 
 Reports come at three altitudes: `cell_summary(c)` (one cell),
 `fleet_summary()` (every request in one pool, gap still aggregated
@@ -21,7 +23,13 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.bank import UNKNOWN_CONTEXT
-from repro.serving.telemetry import latency_stats_ms, on_device_gap
+from repro.core.control import (
+    latency_stats_ms,
+    on_device_gap,
+    windowed_mean,
+    windowed_mix,
+    windowed_rate,
+)
 
 
 class _Observations:
@@ -136,13 +144,7 @@ class FleetTelemetry:
         if self._bw[cell].empty:
             return None
         t, v = self._bw[cell].arrays()
-        past = t <= now
-        if not past.any():
-            return None
-        in_win = past & (t >= now - window_s)
-        if in_win.any():
-            return float(v[in_win].mean())
-        return float(v[past][np.argmax(t[past])])
+        return windowed_mean(t, v, window_s, now, stale_fallback=True)
 
     def context_mix_estimate(
         self, cell: int, window_s: float, now: float
@@ -155,20 +157,12 @@ class FleetTelemetry:
         if self._ctx[cell].empty:
             return None
         t, v = self._ctx[cell].arrays()
-        m = (t >= now - window_s) & (t <= now) & (v >= 0)
-        if not m.any():
-            return None
-        counts = np.bincount(v[m], minlength=len(self.context_keys))
-        return counts / counts.sum()
+        return windowed_mix(t, v, len(self.context_keys), window_s, now)
 
     def arrival_rate_estimate(
         self, cell: int, window_s: float, now: float
     ) -> Optional[float]:
-        t = self._arrivals[cell]
-        n = int(((t >= now - window_s) & (t <= now)).sum())
-        if n == 0:
-            return None
-        return n / max(min(window_s, now), 1e-9)
+        return windowed_rate(self._arrivals[cell], window_s, now)
 
     # ------------------------------------------------------------ reports
     def requests(self, cell: Optional[int] = None) -> int:

@@ -46,18 +46,71 @@ class CellWorkload:
         return int(self.arrival_s.shape[0])
 
 
+@dataclass(frozen=True)
+class DiurnalEnvelope:
+    """Deterministic sinusoidal rate modulation for Poisson arrivals.
+
+    The instantaneous rate is ``base_rate * (1 + amplitude *
+    sin(2*pi*(t + phase_s)/period_s))`` -- the fleet-realism knob the
+    per-cell constant-rate Poisson lacks (traffic peaks and troughs over
+    the simulated day). `period_s` is whatever "a day" means at the
+    simulation's time scale; staggering `phase_s` across cells models
+    sites in different time zones.
+    """
+
+    period_s: float = 60.0
+    amplitude: float = 0.5  # in [0, 1): trough rate stays positive
+    phase_s: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.amplitude < 1.0:
+            raise ValueError("amplitude must be in [0, 1)")
+        if self.period_s <= 0:
+            raise ValueError("period_s must be positive")
+
+    def rate_factor(self, t) -> np.ndarray:
+        """Multiplier on the base rate at time(s) t."""
+        t = np.asarray(t, np.float64)
+        return 1.0 + self.amplitude * np.sin(
+            2.0 * np.pi * (t + self.phase_s) / self.period_s
+        )
+
+
 def poisson_cell_workload(
     rate_hz: float,
     n_requests: int,
     n_samples: int,
     n_devices: int = 1,
     seed: int = 0,
+    envelope: Optional[DiurnalEnvelope] = None,
 ) -> CellWorkload:
     """Poisson arrivals; samples walk the dataset sequentially and devices
     round-robin -- the same conventions as `repro.serving.workload`, as
-    columns instead of `Request` objects."""
+    columns instead of `Request` objects.
+
+    `envelope` switches the stream to an inhomogeneous Poisson process
+    under the given diurnal rate modulation, materialized by seeded
+    thinning (candidates at the peak rate, each kept with probability
+    rate(t)/peak) -- deterministic under the seed, exactly `n_requests`
+    arrivals. The default (None) keeps the homogeneous stream
+    bit-identical to what this function always produced."""
     rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    if envelope is None:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    else:
+        peak = rate_hz * (1.0 + envelope.amplitude)
+        arrivals = np.empty(n_requests, np.float64)
+        count, t = 0, 0.0
+        while count < n_requests:
+            m = 2 * (n_requests - count) + 16
+            cand = t + np.cumsum(rng.exponential(1.0 / peak, m))
+            keep = rng.random(m) * (1.0 + envelope.amplitude) \
+                < envelope.rate_factor(cand)
+            acc = cand[keep]
+            take = min(len(acc), n_requests - count)
+            arrivals[count:count + take] = acc[:take]
+            count += take
+            t = float(cand[-1])
     idx = np.arange(n_requests, dtype=np.int64)
     return CellWorkload(arrivals, idx % n_samples, idx % n_devices)
 

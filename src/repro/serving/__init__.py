@@ -14,10 +14,13 @@ serving system:
 * `runtime`   -- the discrete-event simulator: N edge devices, a shared
                  uplink, a cloud tier, and a microbatcher that coalesces
                  refused samples into cloud batches;
-* `controller`-- an Edgent-style online controller that re-selects the
+* `controller`-- an Edgent-style online controller over the shared
+                 `repro.core.control.ControllerCore`: re-selects the
                  deployed branch and effective p_tar by re-scoring the
                  OffloadPlan's fitted calibrators under measured bandwidth
-                 (no re-fitting);
+                 (no re-fitting), optionally weighting the candidate table
+                 by the traffic mix its own telemetry observed
+                 (context-aware, the fleet controller's rule);
 * `drift`     -- drifting INPUT conditions: context schedules (piecewise /
                  Markov regime drift) and `ContextualLogitsCore`, which
                  serves per-distortion-context logits and picks each

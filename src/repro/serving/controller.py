@@ -2,14 +2,25 @@
 
 Every `interval_s` of simulated time the controller looks at a trailing
 window of telemetry -- the mean uplink rate observed by actual transfers
-and the mean queue depth -- and re-scores the deployed `OffloadPlan` with
-`repro.core.policy.rescore_plan`: the plan's fitted per-exit calibrators
-are applied to held-out validation logits (no re-fitting), each candidate
-(branch, effective p_tar) is priced with the Neurosurgeon expected-latency
-objective at the MEASURED bandwidth, and the cheapest candidate that still
-meets the accuracy floor wins. Queue pressure scales the effective edge
-service time (each queued request adds one service quantum of wait), so a
-backed-up fleet biases toward configurations that offload less.
+and the mean queue depth -- and re-scores the deployed `OffloadPlan`
+through the shared `repro.core.control.ControllerCore`: the plan's fitted
+per-exit calibrators are applied to held-out validation logits (no
+re-fitting), each candidate (branch, effective p_tar) is priced with the
+Neurosurgeon expected-latency objective at the MEASURED bandwidth, and
+the cheapest candidate that still meets the accuracy floor (and, when
+capped, the estimated reliability-gap contract) wins. Queue pressure
+scales the effective edge service time (each queued request adds one
+service quantum of wait), so a backed-up fleet biases toward
+configurations that offload less.
+
+Built with per-context validation logits (``{context: {branch: (N, C)}}``
++ per-context final logits), the controller is CONTEXT-AWARE -- the
+fleet's mix-weighted re-scoring, ported back to the event runtime: each
+tick it asks its own telemetry for the trailing-window traffic mix
+(`Telemetry.context_mix_estimate`, fed by gate-time context verdicts) and
+weights the validation samples by each context's observed share, so the
+candidate table prices the drifting inputs actually being served instead
+of the clean distribution.
 
 The controller owns no queues and no clock: `ServingRuntime` calls
 `update(t, telemetry)` and applies the returned plan's (exit_index, p_tar).
@@ -17,31 +28,32 @@ The controller owns no queues and no clock: `ServingRuntime` calls
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.policy import OffloadPlan, rescore_plan
+from repro.core.control import ControlConfig, ControllerCore, hold_incumbent
+from repro.core.policy import OffloadPlan, rescore_plan  # noqa: F401  (re-export)
 from repro.offload import latency as L
 
 
 @dataclass
-class ControllerConfig:
-    interval_s: float = 1.0  # re-score cadence (simulated seconds)
-    window_s: float = 2.0  # trailing telemetry window
-    p_tar_grid: Optional[Sequence[float]] = None  # None = keep the plan's
-    min_accuracy: Optional[float] = None  # accuracy floor for candidates
-    hysteresis: float = 0.05  # min relative latency gain to switch
+class ControllerConfig(ControlConfig):
+    """The shared control knobs (`repro.core.control.ControlConfig`) plus
+    the event runtime's queue-awareness."""
+
     queue_aware: bool = True  # inflate edge time by observed queue depth
-    utilization_aware: bool = True  # M/M/1 uplink correction from arrivals
 
 
 class OnlineController:
     """Re-selects (deployed branch, effective p_tar) from telemetry.
 
-    exit_logits: {physical_branch: (N, C) held-out validation logits},
-    the same convention as `LogitsCore`. `labels`/`final_logits` enable the
-    accuracy floor; without them candidates are ranked by latency alone.
+    exit_logits: {physical_branch: (N, C) held-out validation logits}
+    (the `LogitsCore` convention), or {context: {branch: (N, C)}} with
+    per-context `final_logits` for the context-aware mix-weighted
+    re-score. `labels`/`final_logits` enable the accuracy floor and the
+    reliability-gap cap; without them candidates are ranked by latency
+    alone.
 
     Accepts a `repro.core.bank.PlanBank` in place of the plan: the bank's
     default plan is re-scored, so the controller moves the fleet-wide
@@ -55,49 +67,30 @@ class OnlineController:
         self,
         plan: OffloadPlan,
         profile: L.LatencyProfile,
-        exit_logits: Dict[int, np.ndarray],
-        final_logits: Optional[np.ndarray] = None,
+        exit_logits: Dict,
+        final_logits=None,
         labels: Optional[np.ndarray] = None,
         config: Optional[ControllerConfig] = None,
         payload_nbytes=None,
     ):
-        from repro.core.bank import PlanBank
-
-        if isinstance(plan, PlanBank):
-            plan = plan.default_plan
-        if plan.criterion != "confidence":
-            raise ValueError(
-                "OnlineController re-scores the confidence target p_tar; "
-                f"{plan.criterion!r}-criterion plans are not re-scorable"
-            )
-        self.plan = plan
-        self.profile = profile
         self.config = config or ControllerConfig()
-        self.branches = sorted(exit_logits)
-        if self.branches != list(range(1, len(self.branches) + 1)):
+        self.core = ControllerCore(
+            plan, profile, exit_logits,
+            final_logits=final_logits, labels=labels,
+            payload_nbytes=payload_nbytes,
+        )
+        if self.config.max_reliability_gap is not None and not self.core.has_labels:
             raise ValueError(
-                "exit_logits keys must be contiguous physical branches 1..K "
-                "(branch k gates with plan.calibrators[k-1]); got "
-                f"{self.branches}"
+                "max_reliability_gap needs labels to estimate candidate "
+                "on-device accuracy"
             )
-        self.exit_logits_list = [exit_logits[b] for b in self.branches]
-        self.final_logits = final_logits
-        self.labels = labels
-        if payload_nbytes is None:
-            from repro.models.convnet import payload_bytes
-
-            payload_nbytes = payload_bytes
-        # calibrated (conf, pred) never change between ticks: compute once
-        from repro.core.exits import gate_statistics
-
-        self._exit_stats = []
-        for i, z in enumerate(self.exit_logits_list):
-            conf, pred, _ = gate_statistics(plan.calibrated_logits(z, i))
-            self._exit_stats.append((np.asarray(conf), np.asarray(pred)))
-        self.edge_times_s = [L.edge_time(profile, b) for b in self.branches]
-        self.cloud_times_s = [L.cloud_time(profile, b) for b in self.branches]
-        self.payload_bytes = [payload_nbytes(b) for b in self.branches]
+        self.plan = self.core.plan
+        self.profile = profile
         self.history: List[Tuple[float, float, int, float]] = []  # (t, bw, branch, p_tar)
+
+    @property
+    def branches(self) -> List[int]:
+        return self.core.branches
 
     @property
     def interval_s(self) -> float:
@@ -108,53 +101,40 @@ class OnlineController:
         bw = telemetry.bandwidth_estimate(cfg.window_s, now=t)
         if bw is None:
             bw = self.profile.uplink_bps  # nothing measured yet: trust nominal
-        edge_times = self.edge_times_s
+        edge_times = None
         if cfg.queue_aware:
             depth = telemetry.queue_estimate(cfg.window_s, now=t)
             if depth is not None and depth > 0:
-                edge_times = [e * (1.0 + depth) for e in edge_times]
+                edge_times = [
+                    e * (1.0 + depth) for e in self.core.edge_times_s
+                ]
         rate_hz = None
         if cfg.utilization_aware:
             rate_hz = telemetry.arrival_rate_estimate(cfg.window_s, now=t)
+        weight = None
+        if self.core.context_aware:
+            mix = telemetry.context_mix_estimate(cfg.window_s, now=t)
+            weight = self.core.sample_weight_for_mix(mix)
 
         # candidate table under measured conditions (calibrators re-used)
-        candidate, table = rescore_plan(
+        candidate, table = self.core.rescore(
             self.plan,
-            self.exit_logits_list,
-            edge_times_s=edge_times,
-            cloud_times_s=self.cloud_times_s,
-            payload_bytes=self.payload_bytes,
             uplink_bps=bw,
-            labels=self.labels,
-            final_logits=self.final_logits,
+            edge_times_s=edge_times,
+            arrival_rate_hz=rate_hz,
             p_tar_grid=cfg.p_tar_grid,
             min_accuracy=cfg.min_accuracy,
-            arrival_rate_hz=rate_hz,
-            exit_stats=self._exit_stats,
+            max_reliability_gap=cfg.max_reliability_gap,
+            sample_weight=weight,
         )
         # hysteresis: keep the incumbent unless the ADOPTED candidate (the
-        # accuracy-feasible winner, not the global latency minimum) is
-        # clearly better -- but never retain an incumbent that itself
-        # violates the accuracy floor
-        def row_for(p):
-            return next(
-                (
-                    r for r in table
-                    if r["exit_index"] == p.exit_index and r["p_tar"] == p.p_tar
-                ),
-                None,
-            )
-
-        cur, new = row_for(self.plan), row_for(candidate)
-        cur_feasible = cur is not None and (
-            cfg.min_accuracy is None
-            or (cur["accuracy"] is not None and cur["accuracy"] >= cfg.min_accuracy)
-        )
-        if (
-            cur_feasible
-            and new is not None
-            and new["expected_latency_s"]
-            > (1.0 - cfg.hysteresis) * cur["expected_latency_s"]
+        # feasible winner, not the global latency minimum) is clearly
+        # better -- but never retain an incumbent that itself violates the
+        # accuracy floor or the reliability-gap cap
+        if hold_incumbent(
+            table, self.plan, candidate, cfg.hysteresis,
+            min_accuracy=cfg.min_accuracy,
+            max_reliability_gap=cfg.max_reliability_gap,
         ):
             candidate = self.plan  # not worth churning the fleet
         self.plan = candidate

@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.bank import PlanBank
-from repro.core.exits import gate_statistics
+from repro.core.gatepath import get_gate_backend
 from repro.core.policy import OffloadPlan
 
 
@@ -165,6 +165,9 @@ class ContextualLogitsCore:
     Confidence/prediction are precomputed per (true context, expert plan,
     branch); only the mask depends on the runtime's moving p_tar, so
     controller branch/target switches stay free, exactly as in LogitsCore.
+    The precompute routes through the selected `GateBackend`
+    (`repro.core.gatepath`), the same execution layer the fleet's dense
+    gate table uses.
     """
 
     contextual = True
@@ -177,7 +180,9 @@ class ContextualLogitsCore:
         schedule: ContextSchedule,
         labels: Optional[np.ndarray] = None,
         features_by_context: Optional[Dict[str, np.ndarray]] = None,
+        backend=None,
     ):
+        self.backend = get_gate_backend(backend)
         if isinstance(plan_or_bank, PlanBank):
             self.bank: Optional[PlanBank] = plan_or_bank
             plans = dict(plan_or_bank.plans)
@@ -237,13 +242,11 @@ class ContextualLogitsCore:
             for pk in needed:
                 plan = plans[pk] if self.bank is None else self.bank.plan_for(pk)
                 for b in self.branches:
-                    c, p, _ = gate_statistics(
-                        plan.calibrated_logits(
-                            exit_logits_by_context[ctx][b], b - 1
-                        )
+                    c, p = self.backend.plan_gate_block(
+                        plan, exit_logits_by_context[ctx][b], branch=b - 1
                     )
-                    self.conf[(ctx, pk, b)] = np.asarray(c, np.float64)
-                    self.pred[(ctx, pk, b)] = np.asarray(p)
+                    self.conf[(ctx, pk, b)] = c
+                    self.pred[(ctx, pk, b)] = p
         self.final_pred = {
             ctx: np.argmax(np.asarray(z), axis=-1)
             for ctx, z in final_logits_by_context.items()

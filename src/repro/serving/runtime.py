@@ -308,6 +308,11 @@ class ServingRuntime:
             on_device, pred, conf, ctx, est = self.core.gate(
                 req.sample, branch, p_tar, t
             )
+            if ctx is not None:
+                # the edge-side verdict when an estimator ran, else the
+                # true context -- the stream a context-aware controller
+                # windows into its traffic-mix estimate
+                self.telemetry.observe_context(t, est if est is not None else ctx)
         else:
             on_device, pred, conf = self.core.gate(req.sample, branch, p_tar)
             ctx = est = None

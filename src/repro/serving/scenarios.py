@@ -251,6 +251,34 @@ def fit_drift_plans(val: dict, p_tar: float = 0.8):
     return uncal, global_plan, bank
 
 
+def drift_controller_config(
+    interval_s: float = 1.0,
+) -> ControllerConfig:
+    """The reference controller configuration for the drift scenario's
+    controller arms -- shared by the acceptance test and the distortion
+    bench so the config CI asserts under and the config the tests pin
+    down are the same object.
+
+    The p_tar grid and the reliability-gap cap are what give a
+    context-aware re-score something to use: under overconfident drift
+    the gap-minimizing effective p_tar is context-dependent (high on
+    clean inputs, low on heavily distorted ones), so a controller that
+    prices candidates on the OBSERVED mix can track it while the
+    clean-validation-only re-score, whose gap estimates are always tiny,
+    cannot. The accuracy floor is deliberately below the clean floor:
+    holding the paper's reliability contract under heavy distortion
+    costs end-to-end accuracy, and a floor at the clean level would
+    forbid exactly the honest low-p_tar candidates the contract needs.
+    """
+    return ControllerConfig(
+        interval_s=interval_s,
+        window_s=2.0 * interval_s,
+        min_accuracy=0.75,
+        p_tar_grid=(0.5, 0.6, 0.7, 0.8, 0.9),
+        max_reliability_gap=0.05,
+    )
+
+
 def severity_drift_schedule(
     contexts: Optional[List[DistortionSpec]] = None,
     dwell_s: float = 3.0,
@@ -277,17 +305,30 @@ def run_distortion_drift(
     val: Optional[dict] = None,
     profile: Optional[L.LatencyProfile] = None,
     controller_interval_s: float = 1.0,
+    context_aware: bool = False,
+    controller_config: Optional[ControllerConfig] = None,
 ) -> Telemetry:
     """Serve `test` under severity drift with a plan or an expert bank.
 
     The network is the paper's fixed link: holding bandwidth constant
     isolates the input-drift axis, so any miscalibration-gap difference
     between plans is attributable to calibration alone. with_controller
-    (needs `val` for the clean validation logits) layers the Edgent-style
-    re-scorer on top, demonstrating that bandwidth-driven (branch, p_tar)
-    moves compose with distortion-driven expert selection;
-    `controller_interval_s` sets its cadence (the dwell-vs-interval bench
-    sweeps it against the schedule's dwell time).
+    (needs `val`) layers the Edgent-style re-scorer on top, demonstrating
+    that bandwidth-driven (branch, p_tar) moves compose with
+    distortion-driven expert selection; `controller_interval_s` sets its
+    cadence (the dwell-vs-interval bench sweeps it against the schedule's
+    dwell time).
+
+    `context_aware` switches the controller from the CLEAN-validation-only
+    re-score (the original arm: candidate tables priced on clean logits,
+    blind to drift) to the fleet's mix-weighted rule ported back to the
+    event runtime: the controller receives ALL contexts' validation
+    logits and each tick weights them by the traffic mix its own
+    telemetry observed over the trailing window, so candidate offload
+    probabilities, accuracies, and reliability gaps price the inputs
+    actually being served. `controller_config` overrides the reference
+    controller configuration (shared by both arms so the information,
+    not the knobs, is the difference).
     """
     profile = profile or L.paper_2020()
     schedule = severity_drift_schedule() if schedule is None else schedule
@@ -303,13 +344,20 @@ def run_distortion_drift(
     if with_controller:
         if val is None:
             raise ValueError("with_controller needs the val split")
+        config = controller_config or ControllerConfig(
+            interval_s=controller_interval_s,
+            window_s=2.0 * controller_interval_s,
+            min_accuracy=0.85,
+        )
+        if context_aware:  # all contexts' val logits -> mix-weighted tables
+            exit_logits, final_logits = val["exit_logits"], val["final"]
+        else:  # the original clean-validation-only re-score
+            exit_logits = val["exit_logits"]["clean"]
+            final_logits = val["final"]["clean"]
         controller = OnlineController(
-            plan_or_bank, profile,
-            val["exit_logits"]["clean"],
-            final_logits=val["final"]["clean"], labels=val["labels"],
-            config=ControllerConfig(interval_s=controller_interval_s,
-                                    window_s=2.0 * controller_interval_s,
-                                    min_accuracy=0.85),
+            plan_or_bank, profile, exit_logits,
+            final_logits=final_logits, labels=val["labels"],
+            config=config,
         )
     rt = ServingRuntime(
         core, profile, plan_or_bank, reqs,

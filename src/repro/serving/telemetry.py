@@ -1,11 +1,18 @@
 """Per-request bookkeeping for the serving runtime.
 
 `Telemetry` collects one `RequestRecord` per served request plus timestamped
-observations of uplink bandwidth, queue depth, and controller decisions.
-It answers both the reporting questions (p50/p95/p99 latency, deadline-miss
-rate, offload rate, accuracy, throughput) and the control questions (what
-did the link/queues look like over the last window) -- the latter is what
+observations of uplink bandwidth, queue depth, gate-time context verdicts,
+and controller decisions. It answers both the reporting questions
+(p50/p95/p99 latency, deadline-miss rate, offload rate, accuracy,
+throughput) and the control questions (what did the link/queues/traffic
+mix look like over the last window) -- the latter is what
 `OnlineController` consumes.
+
+The metric and estimator definitions live in `repro.core.control`
+(`latency_stats_ms`, `on_device_gap`, `windowed_mean`/`windowed_rate`/
+`windowed_mix`) and are shared with `repro.fleet.telemetry`, so the two
+stacks cannot disagree about what a number means; they are re-exported
+here for the long-standing import sites.
 """
 from __future__ import annotations
 
@@ -14,33 +21,13 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-
-# ------------------------------------------------------ shared primitives
-def latency_stats_ms(latencies_s: np.ndarray) -> Dict[str, float]:
-    """p50/p95/p99/mean in ms from an array of per-request latencies --
-    the one definition of the repo's latency roll-up, shared by the
-    event-driven `Telemetry` and the fleet-scale aggregator."""
-    lat = np.asarray(latencies_s, np.float64)
-    if lat.size == 0:
-        nan = float("nan")
-        return {"p50_ms": nan, "p95_ms": nan, "p99_ms": nan, "mean_ms": nan}
-    p50, p95, p99 = np.percentile(lat, [50, 95, 99])
-    return {
-        "p50_ms": float(p50) * 1e3,
-        "p95_ms": float(p95) * 1e3,
-        "p99_ms": float(p99) * 1e3,
-        "mean_ms": float(lat.mean()) * 1e3,
-    }
-
-
-def on_device_gap(correct: np.ndarray, p_tar: np.ndarray) -> Optional[float]:
-    """|on-device accuracy - mean p_tar in force| for one regime group --
-    the paper's reliability contract, measured where it is made: on the
-    samples the gate kept on the device. None for an empty group."""
-    correct = np.asarray(correct, np.float64)
-    if correct.size == 0:
-        return None
-    return abs(float(correct.mean()) - float(np.mean(p_tar)))
+from repro.core.control import (  # noqa: F401  (shared, re-exported)
+    latency_stats_ms,
+    on_device_gap,
+    windowed_mean,
+    windowed_mix,
+    windowed_rate,
+)
 
 
 @dataclass
@@ -82,6 +69,7 @@ class Telemetry:
         self.arrival_times: List[float] = []
         self.bandwidth_samples: List[Tuple[float, float]] = []  # (t, bps)
         self.queue_samples: List[Tuple[float, float]] = []  # (t, mean per-device depth)
+        self.context_samples: List[Tuple[float, str]] = []  # (t, context key)
         self.controller_events: List[Tuple[float, int, float]] = []  # (t, branch, p_tar)
 
     # ------------------------------------------------------------ ingest
@@ -96,6 +84,12 @@ class Telemetry:
 
     def observe_queue(self, t: float, depth: int) -> None:
         self.queue_samples.append((t, depth))
+
+    def observe_context(self, t: float, context: str) -> None:
+        """The edge-side context verdict at gate time (the estimator's
+        when one ran, else the true context) -- what a context-aware
+        controller windows into a traffic-mix estimate."""
+        self.context_samples.append((t, context))
 
     def record_controller(self, t: float, branch: int, p_tar: float) -> None:
         self.controller_events.append((t, branch, p_tar))
@@ -221,26 +215,16 @@ class Telemetry:
         holds no transfer but older observations exist, the most recent one
         is returned (stale beats assuming the nominal best-case link); None
         only when nothing was ever observed."""
-        samples = self.bandwidth_samples
-        if window_s is not None and now is not None:
-            in_window = [(t, b) for t, b in samples if now - window_s <= t <= now]
-            if not in_window:
-                past = [(t, b) for t, b in samples if t <= now]
-                return max(past, key=lambda s: s[0])[1] if past else None
-            samples = in_window
-        if not samples:
-            return None
-        return float(np.mean([b for _, b in samples]))
+        t = [t for t, _ in self.bandwidth_samples]
+        v = [b for _, b in self.bandwidth_samples]
+        return windowed_mean(t, v, window_s, now, stale_fallback=True)
 
     def queue_estimate(
         self, window_s: Optional[float] = None, now: Optional[float] = None
     ) -> Optional[float]:
-        samples = self.queue_samples
-        if window_s is not None and now is not None:
-            samples = [(t, d) for t, d in samples if now - window_s <= t <= now]
-        if not samples:
-            return None
-        return float(np.mean([d for _, d in samples]))
+        t = [t for t, _ in self.queue_samples]
+        v = [d for _, d in self.queue_samples]
+        return windowed_mean(t, v, window_s, now, stale_fallback=False)
 
     def arrival_rate_estimate(
         self, window_s: float, now: float
@@ -248,11 +232,33 @@ class Telemetry:
         """Fleet-wide arrivals/second over the trailing window (None if no
         arrival landed in it). A simulation younger than the window divides
         by the elapsed time instead, so early estimates aren't biased low."""
-        n = sum(1 for t in self.arrival_times if now - window_s <= t <= now)
-        if n == 0:
+        return windowed_rate(self.arrival_times, window_s, now)
+
+    def context_mix_estimate(
+        self, window_s: float, now: float
+    ) -> Optional[Dict[str, float]]:
+        """Share of the trailing window's gated traffic per context key
+        ({context: share} summing to 1), from the gate-time verdicts
+        `observe_context` recorded; None when nothing (recognizable) was
+        observed. `UNKNOWN_CONTEXT` verdicts are excluded: the bank
+        serves them with the default plan, but their gate statistics
+        belong to no fitted context."""
+        from repro.core.bank import UNKNOWN_CONTEXT
+
+        if not self.context_samples:
             return None
-        span = max(min(window_s, now), 1e-9)
-        return n / span
+        keys = sorted(
+            {c for _, c in self.context_samples if c != UNKNOWN_CONTEXT}
+        )
+        if not keys:
+            return None
+        index = {k: i for i, k in enumerate(keys)}
+        t = [t for t, c in self.context_samples]
+        ids = [index.get(c, -1) for _, c in self.context_samples]
+        mix = windowed_mix(t, ids, len(keys), window_s, now)
+        if mix is None:
+            return None
+        return {k: float(m) for k, m in zip(keys, mix)}
 
     # ----------------------------------------------------------- summary
     def summary(self) -> Dict[str, float]:

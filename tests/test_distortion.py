@@ -412,6 +412,51 @@ def test_bank_composes_with_controller(drift_data):
     assert tel.miscalibration_gap() < g_tel.miscalibration_gap()
 
 
+def test_context_aware_controller_beats_clean_rescore(drift_data):
+    """ISSUE 5 acceptance: on the Markov drift scenario, the
+    context-aware OnlineController arm (candidate tables weighted by the
+    traffic mix the runtime's own telemetry observed) must show a
+    strictly smaller miscalibration gap than the clean-validation-only
+    re-score -- same global plan, same reference controller config, the
+    INFORMATION is the only difference. The same comparison is asserted
+    in CI from BENCH_distortion.json at the full request count."""
+    from repro.serving.scenarios import drift_controller_config
+
+    val, test = drift_data
+    _, global_plan, _ = fit_drift_plans(val)
+    gaps = {}
+    for name, ca in (("clean", False), ("context_aware", True)):
+        tel = run_distortion_drift(
+            global_plan, test, n_requests=600, with_controller=True,
+            val=val, context_aware=ca,
+            controller_config=drift_controller_config(),
+        )
+        gaps[name] = tel.miscalibration_gap()
+        if ca:  # the mix-weighted arm genuinely moved the deployment
+            assert len(tel.controller_events) >= 2
+    assert gaps["context_aware"] < gaps["clean"], gaps
+
+
+def test_telemetry_context_mix_estimate(drift_data):
+    """The runtime records gate-time context verdicts and the windowed
+    mix excludes unknown verdicts -- the event-runtime analogue of
+    FleetTelemetry.context_mix_estimate."""
+    from repro.core.bank import UNKNOWN_CONTEXT
+
+    val, test = drift_data
+    _, _, bank = fit_drift_plans(val)
+    tel = run_distortion_drift(bank, test, n_requests=300)
+    assert tel.context_samples, "gate-time contexts were not observed"
+    t_last = max(t for t, _ in tel.context_samples)
+    mix = tel.context_mix_estimate(window_s=t_last + 1.0, now=t_last)
+    assert mix is not None
+    assert sum(mix.values()) == pytest.approx(1.0)
+    assert UNKNOWN_CONTEXT not in mix
+    assert set(mix) <= set(test["exit_logits"])
+    # an empty window far in the future has nothing recognizable
+    assert tel.context_mix_estimate(window_s=0.5, now=t_last + 1e6) is None
+
+
 def test_contextual_records_round_trip_summary(drift_data):
     import json
 

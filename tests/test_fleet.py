@@ -378,6 +378,56 @@ def test_fleet_controller_shared_cloud_cap(drift_data):
     assert total_off_capped < total_off_free
 
 
+def test_row_feasible_all_offload_vacuously_holds_gap():
+    """A candidate that offloads everything keeps nothing on-device, so
+    the reliability-gap cap is vacuously satisfied; an unknown gap on a
+    row that DOES keep samples on-device stays infeasible."""
+    from repro.core.control import row_feasible, select_candidate
+
+    all_off = dict(exit_index=0, p_tar=0.99, offload_prob=1.0,
+                   expected_latency_s=0.09, uplink_utilization=0.1,
+                   accuracy=0.95, on_device_accuracy=None,
+                   reliability_gap=None)
+    broken = dict(all_off, p_tar=0.8, offload_prob=0.4,
+                  expected_latency_s=0.01, on_device_accuracy=0.55,
+                  reliability_gap=0.25)
+    unknown = dict(all_off, offload_prob=0.4)
+    assert row_feasible(all_off, max_reliability_gap=0.05)
+    assert not row_feasible(broken, max_reliability_gap=0.05)
+    assert not row_feasible(unknown, max_reliability_gap=0.05)
+    # the contract-safe all-offload row wins over the gap-breaking one
+    best = select_candidate([broken, all_off], max_reliability_gap=0.05)
+    assert best is all_off
+
+
+# ------------------------------------------------------ diurnal envelope
+def test_diurnal_envelope_workload():
+    """envelope=None stays bit-identical to the homogeneous stream; an
+    envelope produces a deterministic, sorted, exactly-n stream whose
+    arrivals concentrate in the high-rate phase."""
+    from repro.fleet.topology import DiurnalEnvelope
+
+    flat = poisson_cell_workload(20.0, 2000, 512, seed=5)
+    off = poisson_cell_workload(20.0, 2000, 512, seed=5, envelope=None)
+    np.testing.assert_array_equal(flat.arrival_s, off.arrival_s)
+
+    env = DiurnalEnvelope(period_s=40.0, amplitude=0.8)
+    wl = poisson_cell_workload(20.0, 2000, 512, seed=5, envelope=env)
+    wl2 = poisson_cell_workload(20.0, 2000, 512, seed=5, envelope=env)
+    np.testing.assert_array_equal(wl.arrival_s, wl2.arrival_s)
+    assert len(wl) == 2000
+    assert np.all(np.diff(wl.arrival_s) >= 0)
+    # thinning keeps ~(1/2 + amplitude/pi) of arrivals in the >1x phase
+    frac_high = float((env.rate_factor(wl.arrival_s) > 1.0).mean())
+    assert frac_high > 0.65, frac_high
+    # and the envelope genuinely reshapes the stream vs the flat one
+    assert float((env.rate_factor(flat.arrival_s) > 1.0).mean()) < frac_high
+    with pytest.raises(ValueError, match="amplitude"):
+        DiurnalEnvelope(amplitude=1.0)
+    with pytest.raises(ValueError, match="period"):
+        DiurnalEnvelope(period_s=0.0)
+
+
 # --------------------------------------------------------- validation
 def test_fleet_validation_errors(cascade):
     exits, final, y, plan, profile = cascade
@@ -425,6 +475,25 @@ def test_fleet_acceptance_controller_beats_uncal(drift_data):
         c["miscalibration_gap"], u["miscalibration_gap"]
     )
     assert c["accuracy"] > u["accuracy"]
+
+
+@pytest.mark.slow
+def test_fleet_backend_parity_full_scale(drift_data):
+    """The jitted JAX gate backend reproduces the numpy-backed reference
+    fleet at FULL scale (>=100k requests, 64 cells) -- the window sizes
+    BENCH_fleet.json benchmarks the backends at."""
+    from repro.fleet.scenarios import reference_fleet, run_fleet
+
+    val, test, (uncal, global_plan, bank) = drift_data
+    scn = reference_fleet(val=val, test=test)
+    a = run_fleet(bank, scn).fleet_summary()
+    b = run_fleet(bank, scn, backend="jax").fleet_summary()
+    assert a["requests"] == b["requests"]
+    assert a["offload_rate"] == pytest.approx(b["offload_rate"], abs=1e-12)
+    assert a["p99_ms"] == pytest.approx(b["p99_ms"], rel=1e-9)
+    assert a["miscalibration_gap"] == pytest.approx(
+        b["miscalibration_gap"], abs=1e-9
+    )
 
 
 def test_fleet_acceptance_small(drift_data):

@@ -1,0 +1,224 @@
+"""Gate-backend parity tests (ISSUE 5).
+
+The jitted JAX window gate must match the numpy `gate_block` path --
+confidence to tolerance, predictions and on/offload DECISIONS exactly --
+on plain plans, expert banks (per-sample temperature gather incl. unknown
+verdicts), the dense `GateTable`, and the contextual serving core;
+including empty windows and all-offload windows. Both backends run the
+same float32 `gate_statistics` math, so the tolerance only absorbs XLA
+fusion's last-ulp freedom.
+"""
+import numpy as np
+import pytest
+
+from repro.core.calibration import TemperatureScaling, get_calibrator
+from repro.core.gatepath import (
+    GateBackend,
+    GateTable,
+    JaxGateBackend,
+    NumpyGateBackend,
+    STATIC_CONTEXT,
+    available_gate_backends,
+    get_gate_backend,
+)
+from repro.core.policy import OffloadPlan
+from repro.serving.drift import ContextualLogitsCore
+from repro.serving.scenarios import (
+    fit_drift_plans,
+    severity_drift_schedule,
+    synthetic_cascade_logits,
+    synthetic_distorted_cascade,
+)
+
+CONF_TOL = dict(rtol=1e-5, atol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def cascade():
+    exits, final, y = synthetic_cascade_logits(256)
+    plan = OffloadPlan(
+        p_tar=0.8,
+        calibrators=[TemperatureScaling.from_temperature(1.7),
+                     TemperatureScaling.from_temperature(1.3)],
+    )
+    return exits, final, y, plan
+
+
+@pytest.fixture(scope="module")
+def drift_small():
+    val, test = synthetic_distorted_cascade(n=256, n_val=256)
+    return val, test, fit_drift_plans(val)
+
+
+# ------------------------------------------------------------- registry
+def test_backend_registry():
+    assert {"numpy", "jax"} <= set(available_gate_backends())
+    assert isinstance(get_gate_backend(None), NumpyGateBackend)
+    assert isinstance(get_gate_backend("jax"), JaxGateBackend)
+    # instances pass through; repeated name lookups share the jit caches
+    jx = get_gate_backend("jax")
+    assert get_gate_backend(jx) is jx
+    assert get_gate_backend("jax") is jx
+    with pytest.raises(ValueError, match="unknown gate backend"):
+        get_gate_backend("tpu_pallas_v9")
+
+
+# ------------------------------------------------------------ block level
+def test_plan_gate_block_parity(cascade):
+    exits, final, y, plan = cascade
+    for b in (1, 2):
+        cn, pn = plan.gate_block(exits[b], branch=b - 1)
+        cj, pj = plan.gate_block(exits[b], branch=b - 1, backend="jax")
+        np.testing.assert_allclose(cj, cn, **CONF_TOL)
+        np.testing.assert_array_equal(pj, pn)
+        assert cj.dtype == np.float64 and pj.dtype == np.int64
+
+
+def test_plan_gate_block_rich_calibrator_falls_back(cascade):
+    """Non-temperature calibrators take the exact host path on both
+    backends, so parity is bit-level."""
+    exits, final, y, plan = cascade
+    vec = get_calibrator("vector").fit(exits[1], y)
+    rich = OffloadPlan(p_tar=0.8, calibrators=[vec, plan.calibrators[1]])
+    cn, pn = rich.gate_block(exits[1], branch=0)
+    cj, pj = rich.gate_block(exits[1], branch=0, backend="jax")
+    np.testing.assert_array_equal(cj, cn)
+    np.testing.assert_array_equal(pj, pn)
+
+
+def test_bank_gate_block_parity(drift_small):
+    """Per-sample expert-temperature gather == one gate_block call per
+    distinct expert, unknown (-1 -> default plan) verdicts included."""
+    val, test, (uncal, global_plan, bank) = drift_small
+    ctx = "gaussian_noise@2"
+    z = test["exit_logits"][ctx][1]
+    eids = bank.estimator.predict_ids(test["features"][ctx])
+    eids = np.asarray(eids, np.int64)
+    eids[::7] = -1  # force unknown verdicts through the default-plan slot
+    cn, pn, en = bank.gate_block(z, expert_ids=eids, branch=0)
+    cj, pj, ej = bank.gate_block(z, expert_ids=eids, branch=0, backend="jax")
+    np.testing.assert_allclose(cj, cn, **CONF_TOL)
+    np.testing.assert_array_equal(pj, pn)
+    np.testing.assert_array_equal(ej, en)
+
+
+# ----------------------------------------------------------- table level
+def test_gate_table_precompute_parity(drift_small):
+    val, test, (uncal, global_plan, bank) = drift_small
+    kw = dict(labels=test["labels"], features_by_context=test["features"])
+    tn = GateTable(test["exit_logits"], test["final"], bank, **kw)
+    tj = GateTable(test["exit_logits"], test["final"], bank, backend="jax", **kw)
+    np.testing.assert_allclose(tj.conf, tn.conf, **CONF_TOL)
+    np.testing.assert_array_equal(tj.pred, tn.pred)
+    np.testing.assert_array_equal(tj.final_pred, tn.final_pred)
+
+
+@pytest.mark.parametrize("p_tar", [0.8, 0.0, 1.1],
+                         ids=["mixed", "all-on-device", "all-offload"])
+def test_gate_window_parity(drift_small, p_tar):
+    """Whole-window gather+compare agrees across backends, including the
+    degenerate all-on-device and all-offload windows."""
+    val, test, (uncal, global_plan, bank) = drift_small
+    kw = dict(labels=test["labels"], features_by_context=test["features"])
+    tn = GateTable(test["exit_logits"], test["final"], bank, **kw)
+    tj = GateTable(test["exit_logits"], test["final"], bank, backend="jax", **kw)
+    rng = np.random.default_rng(3)
+    ctx = rng.integers(0, len(tn.ctx_keys), 501)
+    smp = rng.integers(0, tn.n_samples, 501)
+    for branch in tn.branches:
+        cn, pn, on_n = tn.gate_window(ctx, smp, branch, p_tar)
+        cj, pj, on_j = tj.gate_window(ctx, smp, branch, p_tar)
+        np.testing.assert_allclose(cj, cn, **CONF_TOL)
+        np.testing.assert_array_equal(pj, pn)
+        np.testing.assert_array_equal(on_j, on_n)
+    if p_tar == 1.1:
+        assert not on_n.any()
+    if p_tar == 0.0:
+        assert on_n.all()
+
+
+def test_gate_window_empty(drift_small):
+    val, test, (uncal, global_plan, bank) = drift_small
+    kw = dict(labels=test["labels"], features_by_context=test["features"])
+    empty = np.empty(0, np.int64)
+    for backend in (None, "jax"):
+        t = GateTable(test["exit_logits"], test["final"], bank,
+                      backend=backend, **kw)
+        conf, pred, on = t.gate_window(empty, empty, 1, 0.8)
+        assert conf.shape == pred.shape == on.shape == (0,)
+        r = t.gate_window_cells(empty, empty, empty, [1, 2], [0.8, 0.5], 2)
+        assert r["on_device"].shape == (0,)
+        np.testing.assert_array_equal(r["on_count"], [0, 0])
+        np.testing.assert_array_equal(r["offload_count"], [0, 0])
+
+
+def test_gate_window_cells_parity_and_reductions(cascade):
+    """The fleet-wide window entry point: per-sample decisions match and
+    the per-cell segment reductions equal the host bincount."""
+    exits, final, y, plan = cascade
+    tn = GateTable.from_logits(exits, final, plan, labels=y)
+    tj = GateTable.from_logits(exits, final, plan, labels=y, backend="jax")
+    rng = np.random.default_rng(11)
+    n, n_cells = 777, 5
+    ctx = np.zeros(n, np.int64)
+    smp = rng.integers(0, tn.n_samples, n)
+    cells = rng.integers(0, n_cells, n)
+    branch_by_cell = [1, 2, 1, 2, 1]
+    p_tar_by_cell = [0.8, 0.5, 0.95, 0.8, 1.1]
+    rn = tn.gate_window_cells(ctx, smp, cells, branch_by_cell,
+                              p_tar_by_cell, n_cells)
+    rj = tj.gate_window_cells(ctx, smp, cells, branch_by_cell,
+                              p_tar_by_cell, n_cells)
+    np.testing.assert_allclose(rj["confidence"], rn["confidence"], **CONF_TOL)
+    np.testing.assert_array_equal(rj["prediction"], rn["prediction"])
+    np.testing.assert_array_equal(rj["on_device"], rn["on_device"])
+    for r in (rn, rj):
+        np.testing.assert_array_equal(
+            r["on_count"],
+            np.bincount(cells, weights=r["on_device"],
+                        minlength=n_cells).astype(np.int64),
+        )
+        np.testing.assert_array_equal(
+            r["on_count"] + r["offload_count"],
+            np.bincount(cells, minlength=n_cells),
+        )
+
+
+# ----------------------------------------------------- serving-core level
+def test_contextual_core_backend_parity(drift_small):
+    val, test, (uncal, global_plan, bank) = drift_small
+    sched = severity_drift_schedule()
+    kw = dict(labels=test["labels"], features_by_context=test["features"])
+    cn = ContextualLogitsCore(test["exit_logits"], test["final"], bank,
+                              sched, **kw)
+    cj = ContextualLogitsCore(test["exit_logits"], test["final"], bank,
+                              sched, backend="jax", **kw)
+    for key in cn.conf:
+        np.testing.assert_allclose(cj.conf[key], cn.conf[key], **CONF_TOL)
+        np.testing.assert_array_equal(cj.pred[key], cn.pred[key])
+    for t in np.linspace(0.0, 30.0, 7):
+        for s in (0, 17, 101, 255):
+            gn = cn.gate(s, 1, 0.8, t)
+            gj = cj.gate(s, 1, 0.8, t)
+            assert gn[0] == gj[0] and gn[1] == gj[1]  # decision + prediction
+            assert gn[3:] == gj[3:]  # (true ctx, est ctx)
+            assert gn[2] == pytest.approx(gj[2], rel=1e-5)
+
+
+# ------------------------------------------------------- simulator level
+def test_fleet_simulator_backend_parity(drift_small):
+    """End to end: the same small fleet simulated over a numpy-backed and
+    a jax-backed table produces the same telemetry."""
+    from repro.fleet.scenarios import reference_fleet, run_fleet
+
+    val, test, (uncal, global_plan, bank) = drift_small
+    scn = reference_fleet(n_cells=4, requests_per_cell=150,
+                          val=val, test=test)
+    a = run_fleet(bank, scn).fleet_summary()
+    b = run_fleet(bank, scn, backend="jax").fleet_summary()
+    assert a["requests"] == b["requests"]
+    assert a["offload_rate"] == pytest.approx(b["offload_rate"], abs=1e-12)
+    assert a["p99_ms"] == pytest.approx(b["p99_ms"], rel=1e-9)
+    assert a["miscalibration_gap"] == pytest.approx(
+        b["miscalibration_gap"], abs=1e-9
+    )
