@@ -305,14 +305,19 @@ def bench_distortion_serving(n_requests=1500, out_path="BENCH_distortion.json"):
     )
 
 
-def bench_fleet(out_path="BENCH_fleet.json"):
+def bench_fleet(out_path="BENCH_fleet.json", scenario_names=None):
     """Fleet-scale vectorized serving: >=100k requests across >=64 cells
     (heterogeneous links, per-cell Markov severity drift, one shared
     cloud), simulated in seconds by `repro.fleet`. Compares the static
     UNCALIBRATED plan against the expert PlanBank driven by the
     context-aware fleet controller -- the scenario is
     repro.fleet.scenarios.reference_fleet, the SAME one
-    tests/test_fleet.py pins down. All simulated metrics are
+    tests/test_fleet.py pins down -- then sweeps the ADVERSARIAL
+    orchestration matrix (`repro.orchestration.scenarios`: weather
+    fronts, flash crowds, link outages, cloud brownouts, poisoned and
+    good canary rollouts), each with its controller-vs-static (or
+    rollout-vs-no-rollout) verdict. `scenario_names` filters the matrix
+    (None = all registered; [] = skip). All simulated metrics are
     deterministic; the wall-clock throughput column is the speed claim
     the event-driven runtime cannot make."""
     from repro.fleet.scenarios import reference_fleet, run_fleet
@@ -352,10 +357,10 @@ def bench_fleet(out_path="BENCH_fleet.json"):
     # windows a scaled-up fleet would push. Parity is asserted (identical
     # decisions, confidences to 1e-6); the speedup column is the
     # throughput claim and is machine-dependent.
-    from repro.fleet.gate import FleetGateTable
+    from repro.core.gatepath import GateTable
 
     tables = {
-        name: FleetGateTable(
+        name: GateTable(
             scenario.test["exit_logits"], scenario.test["final"], bank,
             labels=scenario.test["labels"],
             features_by_context=scenario.test["features"], backend=name,
@@ -396,6 +401,13 @@ def bench_fleet(out_path="BENCH_fleet.json"):
             "speedup_jax_vs_numpy": us["numpy"] / us["jax"],
             "parity": ok,
         })
+    # adversarial orchestration matrix (churn, QoS, canary rollouts)
+    from repro.orchestration import run_scenarios
+
+    t0 = time.perf_counter()
+    adversarial = run_scenarios(names=scenario_names)
+    adversarial_wall = time.perf_counter() - t0
+
     payload = {
         "scenario": {
             "cells": scenario.topology.n_cells,
@@ -414,6 +426,8 @@ def bench_fleet(out_path="BENCH_fleet.json"):
         "gap_controller": c["miscalibration_gap"],
         "gap_improvement": u["miscalibration_gap"] - c["miscalibration_gap"],
         "gate_backend": {"parity": parity, "windows": gate_rows},
+        "adversarial_scenarios": adversarial,
+        "adversarial_wall_s": adversarial_wall,
         # wall-clock figures are machine-dependent and excluded from any
         # determinism assertion; they are the throughput claim
         "wall_clock": {
@@ -424,12 +438,14 @@ def bench_fleet(out_path="BENCH_fleet.json"):
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     us = total_wall / (len(runs) * n_req) * 1e6
+    n_pass = sum(1 for r in adversarial if r["pass"])
     return us, (
         f"cells={scenario.topology.n_cells};requests={n_req};"
         f"sim_rps={len(runs) * n_req / total_wall:.0f};"
         f"p99_uncal={u['p99_ms']:.0f}ms;p99_ctrl={c['p99_ms']:.0f}ms;"
         f"gap_uncal={u['miscalibration_gap']:.3f};"
-        f"gap_ctrl={c['miscalibration_gap']:.3f};artifact={out_path}"
+        f"gap_ctrl={c['miscalibration_gap']:.3f};"
+        f"scenarios={n_pass}/{len(adversarial)};artifact={out_path}"
     )
 
 
@@ -437,7 +453,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="skip figure benchmarks")
     ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument(
+        "--scenario",
+        default=None,
+        help="comma-separated adversarial scenario names for the fleet "
+        "bench (default: all registered; 'none' skips the matrix)",
+    )
     args, _ = ap.parse_known_args()
+    if args.scenario is None or args.scenario == "all":
+        scenario_names = None
+    elif args.scenario == "none":
+        scenario_names = []
+    else:
+        scenario_names = [s for s in args.scenario.split(",") if s]
 
     print("name,us_per_call,derived")
     rows = [
@@ -449,7 +477,8 @@ def main() -> None:
         ("smoke_decode_step", *bench_smoke_decode()),
         ("serving_runtime_per_request", *bench_serving_runtime()),
         ("distortion_drift_per_request", *bench_distortion_serving()),
-        ("fleet_simulator_per_request", *bench_fleet()),
+        ("fleet_simulator_per_request",
+         *bench_fleet(scenario_names=scenario_names)),
     ]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

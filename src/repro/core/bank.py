@@ -193,6 +193,11 @@ class PlanBank:
     default_context: str
     estimator: Optional[DistortionEstimator] = None
     metadata: Dict[str, Any] = field(default_factory=dict)
+    #: Monotonic deployment version (`repro.orchestration.rollout` bumps it
+    #: per candidate): which bank GENERATION this is, as opposed to
+    #: `schema_version`, which says how the JSON is laid out. Old files
+    #: without the field load as generation 0.
+    bank_version: int = 0
 
     def __post_init__(self):
         if not self.plans:
@@ -275,10 +280,33 @@ class PlanBank:
         )
         return conf, pred, expert_ids
 
+    def bumped(self, bank_version: Optional[int] = None) -> "PlanBank":
+        """A copy at the next (or the given) deployment version -- what a
+        rollout manager registers as the candidate generation. Plans and
+        estimator are shared, not copied: a version bump is bookkeeping."""
+        v = self.bank_version + 1 if bank_version is None else int(bank_version)
+        if v <= self.bank_version:
+            raise ValueError(
+                f"bank_version must increase (have {self.bank_version}, "
+                f"got {v})"
+            )
+        return PlanBank(
+            plans=self.plans,
+            default_context=self.default_context,
+            estimator=self.estimator,
+            metadata=dict(self.metadata),
+            bank_version=v,
+        )
+
     # ------------------------------------------------------- serialization
     def to_dict(self) -> dict:
         return {
+            # "version" is the legacy spelling of the schema version; both
+            # keys are written so pre-orchestration readers keep loading
+            # new files (the schema only ever ADDED optional fields)
             "version": BANK_FORMAT_VERSION,
+            "schema_version": BANK_FORMAT_VERSION,
+            "bank_version": int(self.bank_version),
             "default_context": self.default_context,
             "plans": {k: p.to_dict() for k, p in self.plans.items()},
             "estimator": None if self.estimator is None else self.estimator.to_dict(),
@@ -287,7 +315,10 @@ class PlanBank:
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanBank":
-        version = d.get("version", BANK_FORMAT_VERSION)
+        # "version" is the legacy spelling of schema_version; a file
+        # declaring a too-new layout under EITHER key is refused
+        declared = [d[k] for k in ("schema_version", "version") if k in d]
+        version = max(declared) if declared else BANK_FORMAT_VERSION
         if version > BANK_FORMAT_VERSION:
             raise ValueError(
                 f"bank format v{version} is newer than supported "
@@ -299,6 +330,7 @@ class PlanBank:
             default_context=d["default_context"],
             estimator=None if est is None else DistortionEstimator.from_dict(est),
             metadata=d.get("metadata", {}),
+            bank_version=int(d.get("bank_version", 0)),
         )
 
     def to_json(self, **kwargs) -> str:

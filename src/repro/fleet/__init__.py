@@ -35,8 +35,11 @@ the single-cell, single-device, fixed-link limit (pinned by
 """
 from repro.core.gatepath import GateBackend, GateTable, get_gate_backend
 from repro.fleet.controller import FleetController, FleetControllerConfig
-from repro.fleet.gate import FleetGateTable
 from repro.fleet.simulator import FleetConfig, FleetSimulator
+
+#: Historical alias (the batched gate grew into `GateTable`); kept here
+#: warning-free, while `repro.fleet.gate` now deprecation-warns.
+FleetGateTable = GateTable
 from repro.fleet.telemetry import FleetTelemetry
 from repro.fleet.topology import (
     CellConfig,

@@ -131,11 +131,25 @@ class FleetController:
             return None
         return dict(zip(telemetry.context_keys, np.asarray(raw, np.float64)))
 
-    def update(self, t: float, telemetry) -> List[Tuple[int, float]]:
-        """-> per-cell (physical branch, p_tar) decisions."""
+    def update(
+        self, t: float, telemetry, active=None
+    ) -> List[Tuple[int, float]]:
+        """-> per-cell (physical branch, p_tar) decisions.
+
+        `active` (orchestrated runs): a (C,) bool mask; a DOWN cell is not
+        re-scored -- its telemetry window mixes its own last traffic with
+        shed service on other cells' links -- and instead parks at the
+        plan's deployment, the state it must come back up in. It also
+        contributes zero load to the shared-cloud pass (its arrivals are
+        priced on the host cell that serves them)."""
         cfg = self.config
         chosen_rows, tables, rates = [], [], []
         for c in range(self.n_cells):
+            if active is not None and not active[c]:
+                chosen_rows.append(None)
+                tables.append(None)
+                rates.append(0.0)
+                continue
             bw = telemetry.bandwidth_estimate(c, cfg.window_s, now=t)
             if bw is None:
                 bw = self.profile.uplink_bps  # nothing measured: trust nominal
@@ -168,8 +182,10 @@ class FleetController:
         if cfg.cloud_rho_max is not None:
             chosen_rows = self._shared_cloud_pass(chosen_rows, tables, rates)
 
+        hold = (self.plan.exit_index + 1, float(self.plan.p_tar))
         decisions = [
-            (r["exit_index"] + 1, float(r["p_tar"])) for r in chosen_rows
+            hold if r is None else (r["exit_index"] + 1, float(r["p_tar"]))
+            for r in chosen_rows
         ]
         self.history.append((t, decisions))
         return decisions
@@ -190,8 +206,11 @@ class FleetController:
         """Demote the heaviest cloud contributors until the shared tier's
         utilization fits under the cap (or no feasible demotion remains)."""
         cap = self.config.cloud_rho_max * self.cloud_servers
-        loads = [self._cloud_load(r, rate) for r, rate in zip(chosen, rates)]
-        frozen = set()
+        loads = [
+            0.0 if r is None else self._cloud_load(r, rate)
+            for r, rate in zip(chosen, rates)
+        ]
+        frozen = {c for c, r in enumerate(chosen) if r is None}
         while sum(loads) > cap:
             order = sorted(
                 (c for c in range(self.n_cells) if c not in frozen),

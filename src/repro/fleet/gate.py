@@ -3,21 +3,44 @@
 `FleetGateTable` grew into the repo-wide dense gate table and now lives
 in `repro.core.gatepath` as `GateTable`, where it routes both its
 precompute and its window lookups through the selectable `GateBackend`
-(host numpy or jitted JAX). This module keeps the long-standing
-``repro.fleet.gate`` imports working; new code should import
-`repro.core.gatepath.GateTable` (or `repro.fleet.FleetGateTable`, which
-re-exports the same class).
+(host numpy or jitted JAX). Importing ANY name from this module emits a
+`DeprecationWarning`; new code should import `repro.core.gatepath`
+directly (or `repro.fleet.FleetGateTable`, which re-exports the same
+class warning-free). The shim resolves lazily (PEP 562) so merely
+importing `repro.fleet` stays silent.
 """
 from __future__ import annotations
 
-from repro.core.gatepath import (  # noqa: F401
-    GateBackend,
-    GateTable,
-    JaxGateBackend,
-    NumpyGateBackend,
-    STATIC_CONTEXT,
-    get_gate_backend,
+import warnings
+
+from repro.core import gatepath as _gatepath
+
+#: Every name this module ever re-exported; `FleetGateTable` is the
+#: deprecated alias of `GateTable` (the class itself -- isinstance checks
+#: keep working).
+_SHIMMED = (
+    "FleetGateTable",
+    "GateBackend",
+    "GateTable",
+    "JaxGateBackend",
+    "NumpyGateBackend",
+    "STATIC_CONTEXT",
+    "get_gate_backend",
 )
 
-#: Deprecated alias (the class itself -- isinstance checks keep working).
-FleetGateTable = GateTable
+
+def __getattr__(name: str):
+    if name in _SHIMMED:
+        target = "GateTable" if name == "FleetGateTable" else name
+        warnings.warn(
+            f"repro.fleet.gate.{name} is deprecated; import "
+            f"repro.core.gatepath.{target} instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return getattr(_gatepath, target)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_SHIMMED))

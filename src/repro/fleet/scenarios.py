@@ -18,8 +18,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
+from repro.core.gatepath import GateTable
 from repro.fleet.controller import FleetController, FleetControllerConfig
-from repro.fleet.gate import FleetGateTable
 from repro.fleet.simulator import FleetConfig, FleetSimulator
 from repro.fleet.telemetry import FleetTelemetry
 from repro.fleet.topology import CellConfig, FleetTopology, poisson_cell_workload
@@ -107,6 +107,18 @@ def reference_fleet(
     )
 
 
+def fleet_gate_table(plan_or_bank, scenario: FleetScenario, backend=None) -> GateTable:
+    """The scenario's dense gate table for a plan/bank -- the shared
+    construction `run_fleet` uses, exposed so orchestration scenarios can
+    build CANDIDATE tables (same data, different bank) for rollout."""
+    test = scenario.test
+    return GateTable(
+        test["exit_logits"], test["final"], plan_or_bank,
+        labels=test["labels"], features_by_context=test.get("features"),
+        backend=backend,
+    )
+
+
 def run_fleet(
     plan_or_bank,
     scenario: FleetScenario,
@@ -115,6 +127,8 @@ def run_fleet(
     controller_config: Optional[FleetControllerConfig] = None,
     profile: Optional[L.LatencyProfile] = None,
     backend=None,
+    orchestrator=None,
+    fleet_config: Optional[FleetConfig] = None,
 ) -> FleetTelemetry:
     """Serve the scenario's test split with a plan or expert bank.
 
@@ -124,15 +138,14 @@ def run_fleet(
     cap, fit on the CLEAN validation logits exactly as the single-cell
     controller in `run_distortion_drift`. `backend` selects the gate
     execution path (`repro.core.gatepath`: host numpy default, or the
-    jitted ``"jax"`` window gate).
+    jitted ``"jax"`` window gate). `orchestrator` attaches an
+    orchestration plane (`repro.orchestration`) driving churn, QoS
+    monitoring, and rollouts; `fleet_config` overrides the simulator
+    config (e.g. cloud brownout intervals) and wins over `window_s`.
     """
     profile = profile or L.paper_2020()
-    test, val = scenario.test, scenario.val
-    table = FleetGateTable(
-        test["exit_logits"], test["final"], plan_or_bank,
-        labels=test["labels"], features_by_context=test.get("features"),
-        backend=backend,
-    )
+    val = scenario.val
+    table = fleet_gate_table(plan_or_bank, scenario, backend=backend)
     controller = None
     if with_controller:
         controller = FleetController(
@@ -150,6 +163,7 @@ def run_fleet(
         )
     sim = FleetSimulator(
         table, scenario.topology, profile,
-        config=FleetConfig(window_s=window_s), controller=controller,
+        config=fleet_config or FleetConfig(window_s=window_s),
+        controller=controller, orchestrator=orchestrator,
     )
     return sim.run()

@@ -30,6 +30,26 @@ arrival earlier; (3) time-varying links price a transfer at its start
 time via one fixed-point repricing pass (exact for piecewise-constant
 links whose state doesn't change between the two passes, and always
 exact for fixed links); (4) offloads ship per sample (no microbatcher).
+
+Orchestration hooks (`repro.orchestration` drives them; all default off,
+and the default path is operation-for-operation the pre-orchestration
+simulator): an `orchestrator` object is called once per window boundary
+and may flip per-cell ACTIVATION (a dead cell's window arrivals are shed
+to the nearest live ring neighbor -- served on that cell's devices,
+uplink, deployed state, and gate table, with the ORIGIN cell's context
+regime -- or, with no live neighbor, shipped whole-window to the shared
+cloud over a nominal-rate backhaul), swap per-cell GATE TABLES (canary /
+fleet-wide rollout of a new `PlanBank`; candidate tables must serve the
+same contexts, samples, and branches as the incumbent), and declare
+CLOUD SLOWDOWN intervals (brownouts: cloud service time scaled for jobs
+whose transfer completes inside the interval). Shed service runs
+shed-batch-after-(or before)-own-batch within a window, the same batch
+ordering approximation as (2). While an orchestrator is attached the
+simulator also maintains a LIVE completion view (edge completions exact;
+offloaded completions streamed through an incremental copy of the cloud
+solve, equal to the final deferred solve up to chunked-cumsum round-off)
+so a QoS monitor can watch per-cell tails mid-run; final telemetry still
+comes from the exact deferred solve.
 """
 from __future__ import annotations
 
@@ -62,6 +82,11 @@ def fifo_done(t: np.ndarray, service: np.ndarray, free_s: float) -> np.ndarray:
 @dataclass
 class FleetConfig:
     window_s: float = 0.25  # arrival-window width (config switch granularity)
+    #: ((start_s, end_s, factor), ...) cloud brownout intervals: a cloud job
+    #: whose uplink transfer completes in [start, end) has its service time
+    #: scaled by `factor` (capacity loss at the shared tier). Empty = the
+    #: pre-orchestration behavior, bit for bit.
+    cloud_slowdowns: Tuple[Tuple[float, float, float], ...] = ()
 
 
 class _CloudJobs:
@@ -84,9 +109,70 @@ class _CloudJobs:
 
     def add(self, t, service, win, pos):
         self.t.append(t)
-        self.service.append(np.full(len(t), service))
+        service = np.asarray(service, np.float64)
+        self.service.append(
+            np.full(len(t), service) if service.ndim == 0 else service
+        )
         self.win.append(np.full(len(t), win, np.int64))
         self.pos.append(pos)
+
+
+class _LiveCloud:
+    """Streaming copy of the deferred cloud solve, for the QoS monitor.
+
+    The deferred global solve is exact but only runs after the last
+    window; a QoS monitor needs completions DURING the run. Any cloud job
+    generated in window w has transfer-completion >= w's start, so at a
+    boundary t0 every pending job with t < t0 is final: popping those in
+    (stable) sorted order reproduces the deferred solve's global ordering
+    batch by batch, and each of the K residue-class chains streams with a
+    carried server-free time. Equal to the deferred solve up to chunked-
+    cumsum round-off; never fed back into the final telemetry columns.
+    """
+
+    def __init__(self, k_servers: int):
+        self.k = k_servers
+        self._pend: List[np.ndarray] = []  # [t, service, cell, arrival, ded]
+        self._free = np.zeros(k_servers)
+        self._n_popped = 0
+
+    def add(self, t, service, cell, arrival, deadline):
+        ded = np.nan if deadline is None else float(deadline)
+        self._pend.append(
+            np.stack([
+                t, np.broadcast_to(service, t.shape),
+                np.full(len(t), cell, np.float64), arrival,
+                np.full(len(t), ded),
+            ])
+        )
+
+    def pop(self, now: float):
+        """-> (cell, completion, latency, missed) for every pending job
+        whose transfer completed before `now`."""
+        if not self._pend:
+            return None
+        cols = np.concatenate(self._pend, axis=1)
+        ready = cols[0] < now
+        if not ready.any():
+            return None
+        keep = cols[:, ~ready]
+        self._pend = [keep] if keep.shape[1] else []
+        t, service, cell, arrival, ded = cols[:, ready]
+        order = np.argsort(t, kind="stable")
+        t, service = t[order], service[order]
+        cell, arrival, ded = cell[order], arrival[order], ded[order]
+        done = np.empty(len(t))
+        idx = self._n_popped + np.arange(len(t))
+        for r in range(self.k):
+            m = idx % self.k == r
+            if m.any():
+                out = fifo_done(t[m], service[m], float(self._free[r]))
+                done[m] = out
+                self._free[r] = out[-1]
+        self._n_popped += len(t)
+        lat = done - arrival
+        missed = np.where(np.isnan(ded), -1, (lat > ded).astype(np.int8))
+        return cell.astype(np.int64), done, lat, missed.astype(np.int8)
 
 
 class FleetSimulator:
@@ -109,11 +195,13 @@ class FleetSimulator:
         config: Optional[FleetConfig] = None,
         controller=None,
         payload_nbytes: Optional[Callable[[int], int]] = None,
+        orchestrator=None,
     ):
         self.table = table
         self.topology = topology
         self.profile = profile
         self.config = config or FleetConfig()
+        self.orchestrator = orchestrator
         if self.config.window_s <= 0:
             raise ValueError("window_s must be positive")
         self.controller = controller
@@ -181,6 +269,53 @@ class FleetSimulator:
             if len(cell.workload) and int(cell.workload.sample.max()) >= table.n_samples:
                 raise ValueError("workload samples exceed the gate table")
 
+        # orchestration state (reset per run; see `run`)
+        self._active = topology.initial_active_mask()
+        self._cell_tables: List[Optional[GateTable]] = [None] * topology.n_cells
+        self._backhaul_free = np.zeros(topology.n_cells)
+        self._live: Optional[_LiveCloud] = None
+        self.shed_counts = np.zeros(topology.n_cells, np.int64)
+
+    # ------------------------------------------------- orchestration surface
+    def set_active(self, cell: int, active: bool) -> None:
+        """Flip a cell's activation (churn engine): an inactive cell's
+        arrivals are shed to the nearest live ring neighbor (or the cloud
+        backhaul) until it comes back."""
+        self._active[cell] = bool(active)
+
+    def active_mask(self) -> np.ndarray:
+        return self._active.copy()
+
+    def set_cell_table(self, cell: int, table: Optional[GateTable]) -> None:
+        """Override one cell's gate table (canary / fleet-wide rollout of a
+        new `PlanBank`); None restores the fleet-wide incumbent. The
+        override must serve the same contexts, samples, branches, and bank
+        keys -- a rollout changes CALIBRATION, not the data the fleet is
+        benchmarked on."""
+        if table is not None:
+            base = self.table
+            if (
+                table.ctx_keys != base.ctx_keys
+                or table.n_samples != base.n_samples
+                or table.branches != base.branches
+                or table.bank_keys != base.bank_keys
+            ):
+                raise ValueError(
+                    "cell table override must match the incumbent's contexts/"
+                    "samples/branches/bank keys"
+                )
+        self._cell_tables[cell] = table
+
+    def _table_for(self, cell: int) -> GateTable:
+        t = self._cell_tables[cell]
+        return self.table if t is None else t
+
+    def _cloud_scale_at(self, times: np.ndarray) -> np.ndarray:
+        scale = np.ones(len(times))
+        for a, b, f in self.config.cloud_slowdowns:
+            scale[(times >= a) & (times < b)] *= f
+        return scale
+
     # ----------------------------------------------------------------- run
     def run(self) -> FleetTelemetry:
         topo, cfg, table = self.topology, self.config, self.table
@@ -193,8 +328,15 @@ class FleetSimulator:
             tel.set_arrivals(c, cell.workload.arrival_s)
 
         # every run starts from the plan's deployment (a controller from a
-        # previous run() must not leak its final decisions into this one)
+        # previous run() must not leak its final decisions into this one),
+        # and from the topology's declared activation mask / no overrides
         self._state = [self._initial_state for _ in topo.cells]
+        self._active = topo.initial_active_mask()
+        self._cell_tables = [None] * topo.n_cells
+        self._backhaul_free = np.zeros(topo.n_cells)
+        self.shed_counts = np.zeros(topo.n_cells, np.int64)
+        orch = self.orchestrator
+        self._live = _LiveCloud(topo.cloud_servers) if orch is not None else None
         dev_free = [np.zeros(cell.n_devices) for cell in topo.cells]
         uplink_free = np.zeros(topo.n_cells)
         ptr = np.zeros(topo.n_cells, np.int64)
@@ -202,8 +344,14 @@ class FleetSimulator:
 
         jobs = _CloudJobs()
         window_cols = []  # (cell, dict of columns), patched by the cloud solve
+        if orch is not None:
+            orch.attach(self, tel)
         for w in range(n_windows):
             t0, t1 = w * cfg.window_s, (w + 1) * cfg.window_s
+            if orch is not None:
+                if w > 0:
+                    self._pop_live(t0, tel)
+                orch.on_window(self, tel, w, t0)
             if (
                 self.controller is not None
                 and w > 0
@@ -218,49 +366,129 @@ class FleetSimulator:
                 ptr[c] = hi
                 if hi == lo:
                     continue
-                branch, p_tar = self._state[c]
-                cols = self._edge_and_gate(
-                    c, cell, lo, hi, branch, p_tar, dev_free[c]
-                )
+                if self._active[c]:
+                    branch, p_tar = self._state[c]
+                    cols = self._edge_and_gate(
+                        c, cell, lo, hi, branch, p_tar, dev_free[c]
+                    )
+                    serve_c = c
+                else:
+                    serve_c, cols = self._shed_window(
+                        c, cell, lo, hi, dev_free, tel
+                    )
                 est = cols["est_id"]
                 tel.observe_contexts(
-                    c, cols["edge_done"],
+                    serve_c if serve_c >= 0 else c,
+                    cols["edge_done"],
                     np.where(est >= 0, self._bank_to_table[np.maximum(est, 0)],
                              np.where(est == -2, cols["ctx_id"], -1)),
                 )
                 off = ~cols["on_device"]
                 if off.any():
+                    branch = int(cols["branch"][0])
                     order = np.argsort(cols["edge_done"][off], kind="stable")
                     pos = np.flatnonzero(off)[order]
                     t_ready = cols["edge_done"][pos]
                     nbytes = float(self.payload_nbytes(branch))
-                    rates = cell.network.rates_bps(t_ready)
-                    done = fifo_done(t_ready, nbytes * 8.0 / rates,
-                                     float(uplink_free[c]))
-                    # reprice at the actual transfer start (one fixed-point
-                    # pass; exact for fixed links)
-                    comm = nbytes * 8.0 / cell.network.rates_bps(
-                        done - nbytes * 8.0 / rates
-                    )
-                    done = fifo_done(t_ready, comm, float(uplink_free[c]))
-                    uplink_free[c] = done[-1]
-                    tel.observe_bandwidth(c, t_ready, nbytes * 8.0 / comm)
-                    jobs.add(done, L.cloud_time(self.profile, branch),
-                             len(window_cols), pos)
+                    if serve_c >= 0:
+                        net = topo.cells[serve_c].network
+                        rates = net.rates_bps(t_ready)
+                        done = fifo_done(t_ready, nbytes * 8.0 / rates,
+                                         float(uplink_free[serve_c]))
+                        # reprice at the actual transfer start (one fixed-
+                        # point pass; exact for fixed links)
+                        comm = nbytes * 8.0 / net.rates_bps(
+                            done - nbytes * 8.0 / rates
+                        )
+                        done = fifo_done(t_ready, comm,
+                                         float(uplink_free[serve_c]))
+                        uplink_free[serve_c] = done[-1]
+                        tel.observe_bandwidth(serve_c, t_ready,
+                                              nbytes * 8.0 / comm)
+                    else:  # whole-fleet outage: nominal-rate cloud backhaul
+                        comm = np.full(
+                            len(t_ready),
+                            nbytes * 8.0 / self.profile.uplink_bps,
+                        )
+                        done = fifo_done(t_ready, comm,
+                                         float(self._backhaul_free[c]))
+                        self._backhaul_free[c] = done[-1]
+                    service = L.cloud_time(self.profile, branch)
+                    if cfg.cloud_slowdowns:
+                        service = service * self._cloud_scale_at(done)
+                    jobs.add(done, service, len(window_cols), pos)
+                    if self._live is not None:
+                        self._live.add(done, service, c,
+                                       cols["arrival"][pos], cols["deadline"])
+                if self._live is not None:
+                    self._observe_edge_live(c, cols, tel)
                 window_cols.append((c, cols))
 
         self._cloud_solve(jobs, window_cols)
         self._flush(window_cols, tel)
+        if orch is not None:
+            orch.finish(self, tel, n_windows * cfg.window_s)
         return tel
+
+    def _pop_live(self, now: float, tel) -> None:
+        """Stream cloud completions whose transfer finished before `now`
+        into the live QoS view (see `_LiveCloud`)."""
+        live = self._live.pop(now)
+        if live is None:
+            return
+        cells, done, lat, missed = live
+        for c in np.unique(cells):
+            m = cells == c
+            tel.observe_live_latency(int(c), done[m], lat[m], missed[m])
+
+    def _observe_edge_live(self, c, cols, tel) -> None:
+        """Edge-resolved live observations: on-device requests complete at
+        edge_done, so their latency/deadline/gate outcomes are final the
+        moment the window is served."""
+        on = cols["on_device"]
+        if not on.any():
+            return
+        t = cols["edge_done"][on]
+        lat = t - cols["arrival"][on]
+        ded = cols["deadline"]
+        missed = (
+            np.full(len(lat), -1, np.int8)
+            if ded is None
+            else (lat > ded).astype(np.int8)
+        )
+        tel.observe_live_latency(c, t, lat, missed)
+        ok = cols["correct"][on] >= 0
+        if ok.any():
+            tel.observe_live_gate(
+                c, t[ok], cols["correct"][on][ok], cols["p_tar"][on][ok]
+            )
 
     # ---------------------------------------------------------- edge tier
     def _edge_and_gate(self, c, cell, lo, hi, branch, p_tar, dev_free):
-        arr = cell.workload.arrival_s[lo:hi]
-        samples = cell.workload.sample[lo:hi]
-        devices = cell.workload.device[lo:hi]
+        wl = cell.workload
+        return self._serve_cols(
+            c, wl.arrival_s[lo:hi], wl.sample[lo:hi], wl.device[lo:hi],
+            cell.n_devices, branch, p_tar, dev_free,
+            ctx_cell=c, deadline_s=cell.deadline_s,
+        )
+
+    def _ctx_ids(self, c: int, times: np.ndarray) -> np.ndarray:
+        """Table context ids in force at `times` under cell c's regime."""
+        if self._sched_map[c] is None:
+            return np.full(len(times), self._static_ctx[c], np.int64)
+        return self._sched_map[c][
+            self.topology.cells[c].schedule.context_ids_at(times)
+        ]
+
+    def _serve_cols(self, serve_c, arr, samples, devices, n_devices,
+                    branch, p_tar, dev_free, ctx_cell, deadline_s):
+        """Serve one window's columns on cell `serve_c`'s devices and gate
+        table, under cell `ctx_cell`'s context regime (they differ only
+        when a dead cell's load was shed here)."""
         s_edge = L.edge_time(self.profile, branch)
-        edge_done = np.empty(hi - lo)
-        for d in range(cell.n_devices):
+        n = len(arr)
+        edge_done = np.empty(n)
+        for d in range(n_devices):
             m = devices == d
             k = int(m.sum())
             if k == 0:
@@ -269,16 +497,11 @@ class FleetSimulator:
             edge_done[m] = done
             dev_free[d] = done[-1]
 
-        if self._sched_map[c] is None:
-            ctx_ids = np.full(hi - lo, self._static_ctx[c], np.int64)
-        else:
-            ctx_ids = self._sched_map[c][
-                cell.schedule.context_ids_at(edge_done)
-            ]
-        conf, pred, on = self.table.gate_window(ctx_ids, samples, branch, p_tar)
-        est = self.table.est_ids(ctx_ids, samples)
-        correct = self.table.correct(samples, pred)
-        n = hi - lo
+        ctx_ids = self._ctx_ids(ctx_cell, edge_done)
+        table = self._table_for(serve_c)
+        conf, pred, on = table.gate_window(ctx_ids, samples, branch, p_tar)
+        est = table.est_ids(ctx_ids, samples)
+        correct = table.correct(samples, pred)
         return {
             "arrival": arr,
             "samples": samples,
@@ -292,6 +515,46 @@ class FleetSimulator:
                 if correct is None
                 else correct.astype(np.int8)
             ),
+            "branch": np.full(n, branch, np.int64),
+            "p_tar": np.full(n, p_tar),
+            "deadline": deadline_s,
+        }
+
+    def _shed_window(self, c, cell, lo, hi, dev_free, tel):
+        """A dead cell's window: serve it on the nearest ACTIVE ring
+        neighbor (that cell's devices, uplink, deployed state, and gate
+        table; the ORIGIN cell's context regime and deadline), or, with no
+        live neighbor anywhere, backhaul the whole window straight to the
+        shared cloud at the nominal uplink rate. Latency columns stay
+        attributed to the origin cell either way."""
+        wl = cell.workload
+        arr = wl.arrival_s[lo:hi]
+        samples = wl.sample[lo:hi]
+        n = hi - lo
+        self.shed_counts[c] += n
+        for s in self.topology.shed_order(c):
+            if self._active[s]:
+                host = self.topology.cells[int(s)]
+                branch, p_tar = self._state[int(s)]
+                cols = self._serve_cols(
+                    int(s), arr, samples,
+                    wl.device[lo:hi] % host.n_devices, host.n_devices,
+                    branch, p_tar, dev_free[int(s)],
+                    ctx_cell=c, deadline_s=cell.deadline_s,
+                )
+                tel.observe_shed_arrivals(int(s), arr)
+                return int(s), cols
+        # whole-fleet outage: every request offloads over the backhaul
+        branch, p_tar = self._state[c]
+        return -1, {
+            "arrival": arr,
+            "samples": samples,
+            "edge_done": arr.copy(),
+            "complete": arr.copy(),
+            "on_device": np.zeros(n, bool),
+            "ctx_id": self._ctx_ids(c, arr),
+            "est_id": np.full(n, -2, np.int64),
+            "correct": np.full(n, -1, np.int8),
             "branch": np.full(n, branch, np.int64),
             "p_tar": np.full(n, p_tar),
             "deadline": cell.deadline_s,
@@ -321,12 +584,13 @@ class FleetSimulator:
             done[idx] = fifo_done(t[idx], service[idx], 0.0)
         for w in np.unique(win_of):
             m = win_of == w
-            _, cols = window_cols[int(w)]
+            cell_of_w, cols = window_cols[int(w)]
+            table = self._table_for(cell_of_w)
             pos = pos_of[m]
             cols["complete"][pos] = done[m]
-            cpred = self.table.cloud_pred(cols["ctx_id"][pos],
-                                          cols["samples"][pos])
-            correct = self.table.correct(cols["samples"][pos], cpred)
+            cpred = table.cloud_pred(cols["ctx_id"][pos],
+                                     cols["samples"][pos])
+            correct = table.correct(cols["samples"][pos], cpred)
             if correct is not None:
                 cols["correct"][pos] = correct.astype(np.int8)
 
@@ -351,7 +615,10 @@ class FleetSimulator:
 
     # ---------------------------------------------------------- controller
     def _apply_controller(self, t: float, tel: FleetTelemetry) -> None:
-        decisions = self.controller.update(t, tel)
+        if self.orchestrator is not None:
+            decisions = self.controller.update(t, tel, active=self._active)
+        else:
+            decisions = self.controller.update(t, tel)
         if len(decisions) != self.topology.n_cells:
             raise ValueError(
                 f"controller returned {len(decisions)} decisions for "

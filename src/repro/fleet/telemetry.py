@@ -114,6 +114,22 @@ class FleetTelemetry:
         self._ctx = [_Observations(np.int64) for _ in range(n_cells)]
         self._arrivals: List[np.ndarray] = [np.empty(0)] * n_cells
         self.controller_events: List[Tuple[float, int, int, float]] = []  # (t, cell, branch, p_tar)
+        # live QoS streams (orchestrated runs only): per-cell lockstep
+        # (t, latency) + (t, missed) and (t, correct) + (t, p_tar) pairs,
+        # fed from resolved completions DURING the run so a QoS monitor
+        # can window per-cell tails mid-simulation. Times are completion
+        # times; attribution follows the ORIGIN cell under load shedding.
+        self._live_lat = [_Observations(np.float64) for _ in range(n_cells)]
+        self._live_miss = [_Observations(np.int8) for _ in range(n_cells)]
+        self._live_cor = [_Observations(np.int8) for _ in range(n_cells)]
+        self._live_pt = [_Observations(np.float64) for _ in range(n_cells)]
+        # arrivals a cell serves on BEHALF of dead neighbors (load shedding)
+        # -- folded into its arrival-rate estimate so a utilization-aware
+        # controller prices the host cell's true demand
+        self._shed_arr = [_Observations(np.int8) for _ in range(n_cells)]
+        #: (t, kind, payload) orchestration audit log -- churn flips, QoS
+        #: trips/clears, rollout transitions -- in event order
+        self.orchestration_events: List[Tuple[float, str, Dict]] = []
 
     # ------------------------------------------------------------- ingest
     def set_arrivals(self, cell: int, arrival_s: np.ndarray) -> None:
@@ -133,6 +149,71 @@ class FleetTelemetry:
 
     def record_controller(self, t: float, cell: int, branch: int, p_tar: float) -> None:
         self.controller_events.append((t, cell, branch, p_tar))
+
+    def observe_live_latency(
+        self, cell: int, times: np.ndarray, latency_s: np.ndarray,
+        missed: np.ndarray,
+    ) -> None:
+        """Resolved completions as they happen (missed: 1/0, -1 = no
+        deadline declared). Edge completions land exactly; offloaded ones
+        stream through the simulator's live cloud view."""
+        self._live_lat[cell].append(times, latency_s)
+        self._live_miss[cell].append(times, missed)
+
+    def observe_live_gate(
+        self, cell: int, times: np.ndarray, correct: np.ndarray,
+        p_tar: np.ndarray,
+    ) -> None:
+        """Label outcomes of ON-DEVICE answers as they resolve -- the
+        stream the reliability-gap SLO is audited against."""
+        self._live_cor[cell].append(times, correct)
+        self._live_pt[cell].append(times, p_tar)
+
+    def record_orchestration(self, t: float, kind: str, **payload) -> None:
+        self.orchestration_events.append((float(t), str(kind), dict(payload)))
+
+    def observe_shed_arrivals(self, cell: int, times: np.ndarray) -> None:
+        """Arrivals shed TO `cell` from a dead neighbor; they join the
+        host's arrival-rate estimate (not its latency columns -- those
+        stay with the origin)."""
+        self._shed_arr[cell].append(times, np.zeros(len(times), np.int8))
+
+    def cell_qos_estimate(
+        self, cell: int, window_s: float, now: float
+    ) -> Dict[str, float]:
+        """Trailing-window QoS as the monitor sees it: p99 latency,
+        deadline-miss rate, on-device reliability gap, and how many
+        completions the window holds. NaN where the window has no
+        evidence for a metric (the monitor treats NaN as 'no verdict')."""
+        out = {"requests": 0, "gate_samples": 0, "p99_ms": float("nan"),
+               "deadline_miss_rate": float("nan"),
+               "reliability_gap": float("nan"),
+               "reliability_shortfall": float("nan")}
+        if not self._live_lat[cell].empty:
+            t, lat = self._live_lat[cell].arrays()
+            m = (t > now - window_s) & (t <= now)
+            out["requests"] = int(m.sum())
+            if m.any():
+                out["p99_ms"] = float(np.quantile(lat[m], 0.99) * 1000.0)
+                _, miss = self._live_miss[cell].arrays()
+                mm = m & (miss >= 0)
+                if mm.any():
+                    out["deadline_miss_rate"] = float(miss[mm].mean())
+        if not self._live_cor[cell].empty:
+            t, cor = self._live_cor[cell].arrays()
+            _, pt = self._live_pt[cell].arrays()
+            m = (t > now - window_s) & (t <= now)
+            out["gate_samples"] = int(m.sum())
+            if m.any():
+                gap = on_device_gap(cor[m], pt[m])
+                if gap is not None:
+                    out["reliability_gap"] = gap
+                # the SLO-facing direction: how far BELOW the promised
+                # target the on-device accuracy fell (over-delivery is 0)
+                out["reliability_shortfall"] = float(
+                    max(0.0, pt[m].mean() - cor[m].mean())
+                )
+        return out
 
     # --------------------------------------------------- controller window
     def bandwidth_estimate(
@@ -162,7 +243,14 @@ class FleetTelemetry:
     def arrival_rate_estimate(
         self, cell: int, window_s: float, now: float
     ) -> Optional[float]:
-        return windowed_rate(self._arrivals[cell], window_s, now)
+        base = windowed_rate(self._arrivals[cell], window_s, now)
+        if self._shed_arr[cell].empty:
+            return base
+        t, _ = self._shed_arr[cell].arrays()
+        shed = float(((t > now - window_s) & (t <= now)).sum()) / window_s
+        if base is None:
+            return shed if shed > 0 else None
+        return base + shed
 
     # ------------------------------------------------------------ reports
     def requests(self, cell: Optional[int] = None) -> int:

@@ -55,16 +55,19 @@ class DiurnalEnvelope:
     per-cell constant-rate Poisson lacks (traffic peaks and troughs over
     the simulated day). `period_s` is whatever "a day" means at the
     simulation's time scale; staggering `phase_s` across cells models
-    sites in different time zones.
+    sites in different time zones. ``amplitude == 1.0`` is allowed and
+    means the trough rate touches exactly zero (a site that goes fully
+    quiet once per period); the thinning sampler handles the zero-rate
+    stretch by construction (keep probability 0 there).
     """
 
     period_s: float = 60.0
-    amplitude: float = 0.5  # in [0, 1): trough rate stays positive
+    amplitude: float = 0.5  # in [0, 1]: 1.0 -> zero-rate trough
     phase_s: float = 0.0
 
     def __post_init__(self):
-        if not 0.0 <= self.amplitude < 1.0:
-            raise ValueError("amplitude must be in [0, 1)")
+        if not 0.0 <= self.amplitude <= 1.0:
+            raise ValueError("amplitude must be in [0, 1]")
         if self.period_s <= 0:
             raise ValueError("period_s must be positive")
 
@@ -117,13 +120,20 @@ def poisson_cell_workload(
 
 @dataclass
 class CellConfig:
-    """One cell: device group + shared uplink + local context regime."""
+    """One cell: device group + shared uplink + local context regime.
+
+    ``initially_active=False`` models a cell that exists in the topology
+    but has not joined the fleet yet (it comes up mid-run via an
+    orchestration ``join`` event); until then its arrivals are shed like
+    a failed cell's.
+    """
 
     network: NetworkModel
     workload: CellWorkload
     n_devices: int = 1
     schedule: Optional[ContextSchedule] = None  # None -> static context
     deadline_s: Optional[float] = None
+    initially_active: bool = True
 
     def __post_init__(self):
         if self.n_devices < 1:
@@ -137,7 +147,17 @@ class CellConfig:
 
 @dataclass
 class FleetTopology:
-    """C cells -> one shared cloud tier of `cloud_servers` servers."""
+    """C cells -> one shared cloud tier of `cloud_servers` servers.
+
+    Cells are arranged on a ring for orchestration purposes: when a cell
+    fails or leaves mid-run (`repro.orchestration`), its arrivals are shed
+    to the nearest ACTIVE neighbor by ring distance (`shed_order`), and to
+    the shared cloud over a backhaul when no live neighbor exists. The
+    per-run activation state itself lives in the simulator (seeded event
+    schedules move it); the topology only declares the starting mask
+    (`initial_active_mask` from each cell's ``initially_active``) and the
+    neighbor geometry.
+    """
 
     cells: List[CellConfig]
     cloud_servers: int = 1
@@ -151,6 +171,25 @@ class FleetTopology:
     @property
     def n_cells(self) -> int:
         return len(self.cells)
+
+    def initial_active_mask(self) -> np.ndarray:
+        """(C,) bool: which cells are up at t=0."""
+        return np.asarray([c.initially_active for c in self.cells], bool)
+
+    def shed_order(self, cell: int) -> np.ndarray:
+        """Every OTHER cell ordered by ring distance from `cell` (ties
+        broken toward the lower index): the order in which a dead cell's
+        load looks for a live host."""
+        if not 0 <= cell < self.n_cells:
+            raise ValueError(f"no cell {cell} in a {self.n_cells}-cell fleet")
+        others = np.asarray(
+            [c for c in range(self.n_cells) if c != cell], np.int64
+        )
+        if others.size == 0:
+            return others
+        dist = np.abs(others - cell)
+        dist = np.minimum(dist, self.n_cells - dist)
+        return others[np.lexsort((others, dist))]
 
     @property
     def n_requests(self) -> int:

@@ -1,0 +1,85 @@
+"""The orchestrator: one object the fleet simulator calls per window.
+
+Wiring order inside a window boundary at time t0 (the simulator calls
+`on_window` BEFORE the controller tick, and pops the live cloud view
+first, so the monitor judges completions strictly before t0):
+
+    1. churn   -- apply every scheduled join/leave with t <= t0;
+    2. monitor -- one QoS evaluation pass over the trailing window;
+    3. rollout -- advance the canary state machine on the fresh verdicts.
+
+Every action lands in `FleetTelemetry.orchestration_events`, so a run's
+operational history replays from its telemetry alone. The orchestrator
+re-arms itself on `attach`, so one instance can drive many runs (each
+run replays the same schedule from the top -- determinism is per-run).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.orchestration.churn import JOIN, ChurnSchedule
+from repro.orchestration.qos import QoSMonitor
+from repro.orchestration.rollout import RolloutManager
+
+
+class Orchestrator:
+    def __init__(
+        self,
+        churn: Optional[ChurnSchedule] = None,
+        monitor: Optional[QoSMonitor] = None,
+        rollout: Optional[RolloutManager] = None,
+    ):
+        if rollout is not None and monitor is None:
+            raise ValueError(
+                "a rollout needs a QoS monitor (its trip verdicts are what "
+                "gate promotion)"
+            )
+        self.churn = churn
+        self.monitor = monitor
+        self.rollout = rollout
+        self._cursor = 0
+
+    # ------------------------------------------------------ simulator hooks
+    def attach(self, sim, tel) -> None:
+        n = sim.topology.n_cells
+        self._cursor = 0
+        if self.churn is not None:
+            for ev in self.churn.events:
+                if ev.cell >= n:
+                    raise ValueError(
+                        f"churn event targets cell {ev.cell} in a {n}-cell fleet"
+                    )
+        if self.monitor is not None:
+            self.monitor.reset(n)
+        if self.rollout is not None:
+            if max(self.rollout.canary_cells) >= n:
+                raise ValueError(
+                    f"canary cells {self.rollout.canary_cells} exceed the "
+                    f"{n}-cell fleet"
+                )
+            self.rollout.reset()
+
+    def on_window(self, sim, tel, window: int, t0: float) -> None:
+        if self.churn is not None:
+            due, self._cursor = self.churn.due(self._cursor, t0)
+            for ev in due:
+                sim.set_active(ev.cell, ev.kind == JOIN)
+                tel.record_orchestration(
+                    t0, f"churn_{ev.kind}", cell=ev.cell, scheduled_t_s=ev.t_s
+                )
+        if self.monitor is not None:
+            result = self.monitor.observe(tel, t0)
+            for c, metric in result["tripped"]:
+                tel.record_orchestration(t0, "qos_trip", cell=int(c), metric=metric)
+            for c in result["cleared"]:
+                tel.record_orchestration(t0, "qos_clear", cell=int(c))
+        if self.rollout is not None:
+            self.rollout.step(sim, tel, self.monitor, t0)
+
+    def finish(self, sim, tel, t_end: float) -> None:
+        tel.record_orchestration(
+            t_end, "finish",
+            active_cells=int(sim.active_mask().sum()),
+            shed_requests=int(sim.shed_counts.sum()),
+            rollout_state=None if self.rollout is None else self.rollout.state,
+        )

@@ -17,6 +17,7 @@ DOC_FILES = [
     ROOT / "docs" / "ARCHITECTURE.md",
     ROOT / "docs" / "calibration.md",
     ROOT / "docs" / "fleet.md",
+    ROOT / "docs" / "orchestration.md",
 ]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.S)

@@ -422,8 +422,11 @@ def test_diurnal_envelope_workload():
     assert frac_high > 0.65, frac_high
     # and the envelope genuinely reshapes the stream vs the flat one
     assert float((env.rate_factor(flat.arrival_s) > 1.0).mean()) < frac_high
+    # amplitude=1.0 is legal (the trough rate reaches exactly zero);
+    # anything beyond would make the rate negative
+    DiurnalEnvelope(amplitude=1.0)
     with pytest.raises(ValueError, match="amplitude"):
-        DiurnalEnvelope(amplitude=1.0)
+        DiurnalEnvelope(amplitude=1.1)
     with pytest.raises(ValueError, match="period"):
         DiurnalEnvelope(period_s=0.0)
 

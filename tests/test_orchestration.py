@@ -1,0 +1,624 @@
+"""Orchestration plane tests: churn, QoS hysteresis, canary rollouts,
+the adversarial scenario registry, and the no-op limits.
+
+The anchor mirrors PR 4's single-cell limit: an orchestrated run with no
+churn and no rollout must reproduce the plain fleet run BIT-EXACTLY
+(summaries compared with ``==``), with and without the fleet controller.
+The live telemetry views, the per-window hooks, the activation mask --
+none of it may perturb service until an orchestration action actually
+fires.
+"""
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.bank import PlanBank
+from repro.fleet.scenarios import fleet_gate_table, reference_fleet, run_fleet
+from repro.fleet.topology import (
+    CellConfig,
+    DiurnalEnvelope,
+    FleetTopology,
+    poisson_cell_workload,
+)
+from repro.orchestration import (
+    JOIN,
+    LEAVE,
+    CellSLO,
+    ChurnEvent,
+    ChurnSchedule,
+    Orchestrator,
+    QoSConfig,
+    QoSMonitor,
+    RolloutManager,
+    SCENARIOS,
+    poisoned_bank,
+    register_scenario,
+    run_scenarios,
+)
+from repro.orchestration.rollout import CANARY, IDLE, PROMOTED, ROLLED_BACK
+from repro.serving.drift import MarkovContextSchedule
+from repro.serving.network import FixedRateNetwork
+from repro.serving.scenarios import fit_drift_plans, synthetic_distorted_cascade
+
+
+@pytest.fixture(scope="module")
+def drift_data():
+    val, test = synthetic_distorted_cascade(
+        directions={"gaussian_blur": "under"}
+    )
+    return val, test, fit_drift_plans(val)
+
+
+def small_fleet(drift_data, seed=0, n_cells=6, requests_per_cell=200):
+    val, test, _ = drift_data
+    return reference_fleet(
+        n_cells=n_cells, requests_per_cell=requests_per_cell, seed=seed,
+        val=val, test=test, cloud_servers=2,
+    )
+
+
+# ------------------------------------------------------------ churn engine
+def test_churn_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        ChurnEvent(1.0, 0, "reboot")
+    with pytest.raises(ValueError, match="t_s"):
+        ChurnEvent(-1.0, 0, JOIN)
+    with pytest.raises(ValueError, match="cell"):
+        ChurnEvent(1.0, -1, LEAVE)
+
+
+def test_churn_schedule_sorted_and_cursor():
+    sched = ChurnSchedule([
+        ChurnEvent(5.0, 1, LEAVE),
+        ChurnEvent(1.0, 0, LEAVE),
+        ChurnEvent(3.0, 0, JOIN),
+        # same-instant bounce on cell 2: join sorts BEFORE leave, so the
+        # net effect of applying both in order is down
+        ChurnEvent(2.0, 2, LEAVE),
+        ChurnEvent(2.0, 2, JOIN),
+    ])
+    times = [e.t_s for e in sched.events]
+    assert times == sorted(times)
+    bounce = [e.kind for e in sched.events if e.t_s == 2.0]
+    assert bounce == [JOIN, LEAVE]
+
+    due, cur = sched.due(0, 2.0)
+    assert [e.t_s for e in due] == [1.0, 2.0, 2.0]
+    # the caller owns the cursor: re-querying from 0 replays the events
+    again, _ = sched.due(0, 2.0)
+    assert again == due
+    due2, cur = sched.due(cur, 10.0)
+    assert [e.t_s for e in due2] == [3.0, 5.0]
+    assert cur == len(sched)
+
+
+def test_churn_outage_and_random_deterministic():
+    out = ChurnSchedule.outage([0, 2], start_s=4.0, duration_s=3.0)
+    assert len(out) == 4
+    assert {(e.cell, e.kind) for e in out.events if e.t_s == 4.0} == {
+        (0, LEAVE), (2, LEAVE)
+    }
+    assert {(e.cell, e.kind) for e in out.events if e.t_s == 7.0} == {
+        (0, JOIN), (2, JOIN)
+    }
+    with pytest.raises(ValueError, match="duration"):
+        ChurnSchedule.outage([0], 1.0, 0.0)
+
+    a = ChurnSchedule.random(16, 200.0, seed=3)
+    b = ChurnSchedule.random(16, 200.0, seed=3)
+    assert a.events == b.events
+    assert len(a) > 0
+    assert all(e.t_s < 200.0 for e in a.events)
+    c = ChurnSchedule.random(16, 200.0, seed=4)
+    assert c.events != a.events
+
+
+def test_shed_order_ring_geometry():
+    wl = poisson_cell_workload(10.0, 20, 64)
+    topo = FleetTopology([
+        CellConfig(network=FixedRateNetwork(1e7), workload=wl)
+        for _ in range(6)
+    ])
+    # nearest ring neighbors first, ties broken toward the lower index
+    assert list(topo.shed_order(0)) == [1, 5, 2, 4, 3]
+    assert list(topo.shed_order(3)) == [2, 4, 1, 5, 0]
+    assert 2 not in topo.shed_order(2)
+
+
+# -------------------------------------------------------------- QoS monitor
+def test_slo_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        CellSLO()
+    with pytest.raises(ValueError, match="min_requests"):
+        CellSLO(p99_ms=100.0, min_requests=0)
+    with pytest.raises(ValueError, match="trip_after"):
+        QoSConfig(trip_after=0)
+
+
+def _qos(requests=100, gate_samples=100, p99=10.0, miss=0.0, gap=0.0,
+         short=0.0):
+    return {
+        "requests": requests, "gate_samples": gate_samples, "p99_ms": p99,
+        "deadline_miss_rate": miss, "reliability_gap": gap,
+        "reliability_shortfall": short,
+    }
+
+
+def test_violation_evidence_gating():
+    mon = QoSMonitor(CellSLO(p99_ms=50.0, reliability_shortfall=0.1,
+                             min_requests=20, min_gate_samples=30))
+    assert mon.violation(_qos()) == ""
+    assert mon.violation(_qos(p99=80.0)) == "p99_ms"
+    assert mon.violation(_qos(short=0.2)) == "reliability_shortfall"
+    # thin completions: the latency verdict abstains, reliability still judged
+    assert mon.violation(_qos(requests=5, p99=500.0)) == ""
+    assert mon.violation(_qos(requests=5, p99=500.0, short=0.2)) == (
+        "reliability_shortfall"
+    )
+    # thin gate stream: reliability abstains, latency still judged
+    assert mon.violation(_qos(gate_samples=10, short=0.9)) == ""
+    # no evidence anywhere -> no verdict at all
+    assert mon.violation(_qos(requests=5, gate_samples=10, p99=500.0,
+                              short=0.9)) is None
+    # NaN (telemetry's no-evidence spelling) never violates
+    assert mon.violation(_qos(p99=float("nan"))) == ""
+    # over-delivery: gap trips on |acc - p_tar|, shortfall does not
+    gapped = QoSMonitor(CellSLO(reliability_gap=0.1))
+    assert gapped.violation(_qos(gap=0.2, short=0.0)) == "reliability_gap"
+    shortfall = QoSMonitor(CellSLO(reliability_shortfall=0.1))
+    assert shortfall.violation(_qos(gap=0.2, short=0.0)) == ""
+
+
+class _ScriptedTel:
+    """cell_qos_estimate scripted per cell as a list of window dicts."""
+
+    def __init__(self, script):
+        self.script = script
+        self.calls = {c: 0 for c in script}
+
+    def cell_qos_estimate(self, cell, window_s, now):
+        i = min(self.calls[cell], len(self.script[cell]) - 1)
+        self.calls[cell] += 1
+        return self.script[cell][i]
+
+
+def test_qos_hysteresis_trip_and_clear():
+    bad, good = _qos(p99=200.0), _qos()
+    none = _qos(requests=0, gate_samples=0)
+    tel = _ScriptedTel({0: [bad, bad, none, bad, good, good, good, good]})
+    mon = QoSMonitor(CellSLO(p99_ms=50.0),
+                     QoSConfig(trip_after=3, clear_after=2))
+    mon.reset(1)
+    events = []
+    for t in range(8):
+        events.append(mon.observe(tel, float(t)))
+        if t == 2:
+            # the no-verdict window froze the two-bad streak, no trip yet
+            assert mon._bad[0] == 2 and not mon.is_tripped(0)
+    # two bad windows: not yet
+    assert not events[0]["tripped"] and not events[1]["tripped"]
+    assert not events[2]["tripped"]
+    # third bad window trips, naming the metric
+    assert events[3]["tripped"] == [(0, "p99_ms")]
+    assert list(mon.tripped_cells()) == []  # cleared again by the end
+    # one clean window is not enough; the second clears
+    assert not events[4]["cleared"]
+    assert events[5]["cleared"] == [0]
+    assert not mon.is_tripped(0)
+    assert mon.trip_log == [(3.0, 0, "p99_ms")]
+    assert mon.clear_log == [(5.0, 0)]
+
+
+def test_qos_watched_subset():
+    bad = _qos(p99=200.0)
+    tel = _ScriptedTel({0: [bad], 1: [bad]})
+    mon = QoSMonitor(CellSLO(p99_ms=50.0), QoSConfig(trip_after=1),
+                     cells=[1])
+    mon.reset(2)
+    out = mon.observe(tel, 0.0)
+    assert out["tripped"] == [(1, "p99_ms")]
+    assert tel.calls[0] == 0  # unwatched cell never queried
+
+
+# ---------------------------------------------------------- rollout manager
+class _FakeSim:
+    def __init__(self, n_cells):
+        class T:
+            pass
+
+        self.topology = T()
+        self.topology.n_cells = n_cells
+        self.tables = {}
+
+    def set_cell_table(self, c, table):
+        self.tables[c] = table
+
+
+class _FakeTel:
+    def __init__(self):
+        self.events = []
+
+    def record_orchestration(self, t, kind, **payload):
+        self.events.append((t, kind, payload))
+
+
+class _FakeMonitor:
+    def __init__(self):
+        self.bad = set()
+
+    def is_tripped(self, c):
+        return c in self.bad
+
+
+def _mini_bank(drift_data):
+    _, _, (_, _, bank) = drift_data
+    return bank
+
+
+def test_rollout_requires_monotonic_version(drift_data):
+    bank = _mini_bank(drift_data)
+    assert bank.bank_version == 0
+    with pytest.raises(ValueError, match="monotonic"):
+        RolloutManager(bank, lambda b: b, canary_cells=(0,))
+    b1 = bank.bumped()
+    assert b1.bank_version == 1
+    assert b1.bumped(7).bank_version == 7
+    with pytest.raises(ValueError, match="increase"):
+        b1.bumped(1)
+    with pytest.raises(ValueError, match="canary"):
+        RolloutManager(b1, lambda b: b, canary_cells=())
+    # versions compose: a rollout over generation 3 rejects generation 3
+    with pytest.raises(ValueError, match="monotonic"):
+        RolloutManager(b1.bumped(3), lambda b: b, canary_cells=(0,),
+                       incumbent_version=3)
+
+
+def test_rollout_promotes_after_clear_probation(drift_data):
+    bank = _mini_bank(drift_data).bumped()
+    sim, tel, mon = _FakeSim(4), _FakeTel(), _FakeMonitor()
+    ro = RolloutManager(bank, lambda b: ("table", b.bank_version),
+                        canary_cells=(0, 2), promote_after=3, start_at_s=2.0)
+    ro.step(sim, tel, mon, 1.0)
+    assert ro.state == IDLE and not sim.tables
+    ro.step(sim, tel, mon, 2.0)
+    assert ro.state == CANARY and ro.started_at == 2.0
+    assert sim.tables == {0: ("table", 1), 2: ("table", 1)}
+    ro.step(sim, tel, mon, 3.0)
+    ro.step(sim, tel, mon, 4.0)
+    assert ro.state == CANARY
+    ro.step(sim, tel, mon, 5.0)
+    assert ro.state == PROMOTED and ro.promoted_at == 5.0
+    assert set(sim.tables) == {0, 1, 2, 3}  # fleet-wide install
+    kinds = [k for _, k, _ in tel.events]
+    assert kinds == ["rollout_canary", "rollout_promote"]
+
+
+def test_rollout_rolls_back_on_canary_trip(drift_data):
+    bank = _mini_bank(drift_data).bumped()
+    sim, tel, mon = _FakeSim(4), _FakeTel(), _FakeMonitor()
+    ro = RolloutManager(bank, lambda b: "cand", canary_cells=(0, 2),
+                        promote_after=10, start_at_s=0.0)
+    ro.step(sim, tel, mon, 0.0)
+    assert ro.state == CANARY
+    mon.bad = {2}
+    ro.step(sim, tel, mon, 1.0)
+    assert ro.state == ROLLED_BACK and ro.rolled_back_at == 1.0
+    assert ro.tripped_canaries == [2]
+    assert sim.tables == {0: None, 2: None}  # overrides removed, nothing else
+    # terminal: later clean windows change nothing
+    mon.bad = set()
+    ro.step(sim, tel, mon, 2.0)
+    assert ro.state == ROLLED_BACK
+    assert [k for _, k, _ in tel.events] == ["rollout_canary",
+                                             "rollout_rollback"]
+
+
+def test_orchestrator_validation(drift_data):
+    bank = _mini_bank(drift_data).bumped()
+    ro = RolloutManager(bank, lambda b: b, canary_cells=(5,))
+    with pytest.raises(ValueError, match="monitor"):
+        Orchestrator(rollout=ro)
+
+
+# ------------------------------------------------------------- no-op limits
+def test_orchestrated_noop_is_bit_exact(drift_data):
+    """THE churn-free limit: an attached orchestrator with nothing to do
+    must not move a single bit of the fleet summary -- plain or with the
+    controller in the loop."""
+    _, _, (uncal, _, bank) = drift_data
+    scn = small_fleet(drift_data)
+    plain = run_fleet(bank, scn).fleet_summary()
+    noop = run_fleet(bank, scn, orchestrator=Orchestrator()).fleet_summary()
+    assert plain == noop
+
+    ctrl = run_fleet(bank, scn, with_controller=True).fleet_summary()
+    ctrl_noop = run_fleet(
+        bank, scn, with_controller=True, orchestrator=Orchestrator()
+    ).fleet_summary()
+    assert ctrl == ctrl_noop
+
+
+def test_orchestrated_run_is_deterministic(drift_data):
+    _, _, (_, _, bank) = drift_data
+    scn = small_fleet(drift_data)
+    churn = ChurnSchedule.outage([0, 3], start_s=3.0, duration_s=4.0)
+
+    def go():
+        return run_fleet(
+            bank, scn, with_controller=True,
+            orchestrator=Orchestrator(churn=churn),
+        )
+
+    a, b = go().fleet_summary(), go().fleet_summary()
+    assert a == b
+
+
+# ------------------------------------------------------- churn through sim
+def test_outage_sheds_conserves_and_records(drift_data):
+    _, _, (_, _, bank) = drift_data
+    scn = small_fleet(drift_data)
+    churn = ChurnSchedule.outage([0, 3], start_s=3.0, duration_s=4.0)
+    orch = Orchestrator(churn=churn)
+    tel = run_fleet(bank, scn, orchestrator=orch)
+
+    # every request of the down cells is still served and attributed home
+    assert tel.requests() == scn.topology.n_requests
+    for c in range(scn.topology.n_cells):
+        assert len(tel._cells[c].column("latency_s")) == len(
+            scn.topology.cells[c].workload
+        )
+
+    kinds = [k for _, k, _ in tel.orchestration_events]
+    assert kinds.count("churn_leave") == 2
+    assert kinds.count("churn_join") == 2
+    finish = [e for e in tel.orchestration_events if e[1] == "finish"][0]
+    assert finish[2]["shed_requests"] > 0
+    assert finish[2]["active_cells"] == scn.topology.n_cells  # all recovered
+
+    # shedding hurt the down cells' latency but no request went missing
+    plain = run_fleet(bank, scn)
+    assert tel.fleet_summary()["p99_ms"] >= plain.fleet_summary()["p99_ms"]
+
+
+def test_whole_fleet_down_backhauls_to_cloud(drift_data):
+    """No live neighbor anywhere: every arrival in the outage window rides
+    the backhaul to the cloud, and the books still balance."""
+    _, _, (_, _, bank) = drift_data
+    scn = small_fleet(drift_data, n_cells=2, requests_per_cell=120)
+    churn = ChurnSchedule.outage([0, 1], start_s=1.0, duration_s=2.0)
+    tel = run_fleet(bank, scn, orchestrator=Orchestrator(churn=churn))
+    assert tel.requests() == scn.topology.n_requests
+    s = tel.fleet_summary()
+    assert s["offload_rate"] > run_fleet(bank, scn).fleet_summary()[
+        "offload_rate"
+    ]
+
+
+def test_churn_event_out_of_range_rejected(drift_data):
+    _, _, (_, _, bank) = drift_data
+    scn = small_fleet(drift_data, n_cells=2, requests_per_cell=50)
+    churn = ChurnSchedule([ChurnEvent(1.0, 9, LEAVE)])
+    with pytest.raises(ValueError, match="cell 9"):
+        run_fleet(bank, scn, orchestrator=Orchestrator(churn=churn))
+
+
+# ------------------------------------------------- canary, both directions
+def test_canary_rollback_and_promotion_e2e(drift_data):
+    """The acceptance pincer at test scale: the poisoned candidate trips
+    its canaries and rolls back before the fleet gap exceeds 1.5x the
+    incumbent's; the good candidate promotes and the promoted run equals
+    the incumbent run to round-off."""
+    _, _, (_, _, bank) = drift_data
+    scn = small_fleet(drift_data, n_cells=8, requests_per_cell=300)
+
+    def pieces(candidate):
+        monitor = QoSMonitor(
+            CellSLO(reliability_shortfall=0.12, min_requests=12,
+                    min_gate_samples=25),
+            QoSConfig(window_s=3.0, trip_after=2, clear_after=4),
+        )
+        rollout = RolloutManager(
+            candidate, table_factory=lambda b: fleet_gate_table(b, scn),
+            canary_cells=(0, 1), promote_after=8, start_at_s=4.0,
+        )
+        return Orchestrator(monitor=monitor, rollout=rollout), rollout
+
+    incumbent = run_fleet(bank, scn).fleet_summary()
+
+    bad = poisoned_bank(bank)
+    assert bad.bank_version == 1
+    assert bad.metadata["poisoned"]
+    orch, ro = pieces(bad)
+    guarded = run_fleet(bank, scn, orchestrator=orch).fleet_summary()
+    assert ro.state == ROLLED_BACK
+    assert ro.tripped_canaries and set(ro.tripped_canaries) <= {0, 1}
+    assert guarded["miscalibration_gap"] <= 1.5 * incumbent[
+        "miscalibration_gap"
+    ]
+    # and the guard genuinely mattered: unguarded promotion is a disaster
+    unguarded = run_fleet(bad, scn).fleet_summary()
+    assert unguarded["miscalibration_gap"] > 1.5 * incumbent[
+        "miscalibration_gap"
+    ]
+
+    orch2, ro2 = pieces(bank.bumped())
+    promoted = run_fleet(bank, scn, orchestrator=orch2).fleet_summary()
+    assert ro2.state == PROMOTED
+    for k in ("p99_ms", "miscalibration_gap", "accuracy", "offload_rate"):
+        a, b = incumbent[k], promoted[k]
+        assert (math.isnan(a) and math.isnan(b)) or a == pytest.approx(
+            b, rel=1e-9, abs=1e-12
+        ), k
+
+
+def test_set_cell_table_validates_compatibility(drift_data):
+    _, _, (_, _, bank) = drift_data
+    scn = small_fleet(drift_data, n_cells=2, requests_per_cell=50)
+    table = fleet_gate_table(bank, scn)
+    from repro.fleet.simulator import FleetConfig, FleetSimulator
+    from repro.offload import latency as L
+
+    sim = FleetSimulator(table, scn.topology, L.paper_2020(),
+                         config=FleetConfig(window_s=0.5))
+    with pytest.raises(IndexError):
+        sim.set_cell_table(5, table)
+    # a table over different data (here: truncated samples) is rejected
+    val, test, _ = drift_data
+    trunc = {
+        "exit_logits": {
+            c: {b: z[:10] for b, z in d.items()}
+            for c, d in test["exit_logits"].items()
+        },
+        "final": {c: f[:10] for c, f in test["final"].items()},
+        "labels": test["labels"][:10],
+        "features": {c: f[:10] for c, f in test["features"].items()},
+    }
+    other = reference_fleet(n_cells=2, requests_per_cell=50, seed=0,
+                            val=val, test=trunc)
+    with pytest.raises(ValueError, match="incumbent"):
+        sim.set_cell_table(0, fleet_gate_table(bank, other))
+
+
+# ------------------------------------------------------- scenario registry
+def test_registry_contents_and_unknown_name():
+    assert {"weather_front", "flash_crowd", "link_outage", "cloud_brownout",
+            "poisoned_canary", "good_rollout"} <= set(SCENARIOS)
+    with pytest.raises(ValueError, match="unknown scenario"):
+        run_scenarios(["nope"])
+
+
+def test_register_scenario_is_open():
+    @register_scenario("_tmp_probe")
+    def probe(quick=False, seed=0):
+        return {"name": "_tmp_probe", "arms": {}, "wins": {},
+                "events": {"quick": quick, "seed": seed}, "pass": True}
+
+    try:
+        (rec,) = run_scenarios(["_tmp_probe"], quick=True, seed=3)
+        assert rec["events"] == {"quick": True, "seed": 3}
+        assert rec["pass"] is True
+    finally:
+        del SCENARIOS["_tmp_probe"]
+
+
+def test_link_outage_scenario_quick_record():
+    (rec,) = run_scenarios(["link_outage"], quick=True)
+    assert rec["name"] == "link_outage"
+    assert set(rec["arms"]) == {"bank_static", "bank_controller"}
+    assert rec["events"]["requests_conserved"]
+    assert rec["events"]["shed_requests"] > 0
+    assert "p99_ms" in rec["wins"]
+    assert json.dumps(rec)  # the record is a pure-JSON artifact
+
+
+@pytest.mark.slow
+def test_scenario_matrix_full_scale_all_pass():
+    """The CI gate, run directly: every registered adversarial scenario
+    passes its required wins at bench scale."""
+    records = run_scenarios()
+    failed = [r["name"] for r in records if not r["pass"]]
+    assert not failed, failed
+
+
+# ------------------------------------------------------- gate shim, drifts
+def test_fleet_gate_shim_deprecated_but_identical():
+    import repro.fleet.gate as shim
+    from repro.core.gatepath import GateTable, get_gate_backend
+
+    with pytest.warns(DeprecationWarning, match="repro.core.gatepath"):
+        assert shim.FleetGateTable is GateTable
+    with pytest.warns(DeprecationWarning):
+        assert shim.get_gate_backend is get_gate_backend
+    with pytest.raises(AttributeError):
+        shim.definitely_not_here
+    assert "FleetGateTable" in dir(shim)
+
+    # the package-level alias stays warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        from repro.fleet import FleetGateTable
+
+        assert FleetGateTable is GateTable
+
+
+def test_single_state_markov_schedule():
+    sch = MarkovContextSchedule(["clean"], dwell_s=0.5, seed=0)
+    t = np.linspace(0.0, 20.0, 101)
+    assert np.all(sch.context_ids_at(t) == 0)
+    assert sch.context_at(13.7) == "clean"
+
+
+def test_diurnal_amplitude_one_trough_hits_zero():
+    env = DiurnalEnvelope(period_s=10.0, amplitude=1.0)
+    t = np.linspace(0.0, 10.0, 1001)
+    f = env.rate_factor(t)
+    assert float(f.min()) == pytest.approx(0.0, abs=1e-9)
+    wl = poisson_cell_workload(20.0, 500, 64, seed=2, envelope=env)
+    assert len(wl) == 500
+    assert np.all(np.diff(wl.arrival_s) >= 0)
+    # nothing arrives at the dead trough: factor at every arrival is > 0
+    assert float(env.rate_factor(wl.arrival_s).min()) > 0.0
+
+
+def test_empty_arrival_windows_through_orchestrated_path(drift_data):
+    """One cell's stream ends long before the other's: its later windows
+    are empty, the QoS monitor gets no-verdict windows (frozen streaks,
+    no spurious trips), and the orchestrated run still balances."""
+    _, _, (_, _, bank) = drift_data
+    scn = small_fleet(drift_data, n_cells=2, requests_per_cell=200)
+    short = poisson_cell_workload(200.0, 40, 512, seed=9)
+    cells = list(scn.topology.cells)
+    cells[0] = CellConfig(
+        network=cells[0].network, workload=short,
+        n_devices=cells[0].n_devices, schedule=cells[0].schedule,
+        deadline_s=cells[0].deadline_s,
+    )
+    scn.topology = FleetTopology(cells, cloud_servers=2)
+    monitor = QoSMonitor(CellSLO(p99_ms=1e4, min_requests=5),
+                         QoSConfig(window_s=1.0, trip_after=1))
+    tel = run_fleet(bank, scn, orchestrator=Orchestrator(monitor=monitor))
+    assert tel.requests() == 40 + 200
+    assert not monitor.trip_log  # idle windows never tripped anything
+
+
+# ------------------------------------------------------- bank round-trips
+def test_bank_json_roundtrip_with_versions(drift_data):
+    _, _, (_, _, bank) = drift_data
+    b3 = bank.bumped(3)
+    d = b3.to_dict()
+    assert d["schema_version"] == 1
+    assert d["version"] == 1  # legacy spelling still written
+    assert d["bank_version"] == 3
+    back = PlanBank.from_json(b3.to_json())
+    assert back.bank_version == 3
+    assert back.to_json() == b3.to_json()  # bit-identical round trip
+
+    # a pre-orchestration file (no schema_version / bank_version) migrates
+    legacy = bank.to_dict()
+    del legacy["schema_version"]
+    del legacy["bank_version"]
+    old = PlanBank.from_dict(legacy)
+    assert old.bank_version == 0
+    assert old.contexts == bank.contexts
+    z = np.random.default_rng(0).normal(size=(16, 10))
+    for ctx in bank.contexts:
+        a, _ = bank.plan_for(ctx).gate_block(z, branch=0)
+        b, _ = old.plan_for(ctx).gate_block(z, branch=0)
+        np.testing.assert_array_equal(a, b)
+
+    with pytest.raises(ValueError, match="newer"):
+        PlanBank.from_dict({**bank.to_dict(), "schema_version": 99})
+
+
+def test_poisoned_bank_validation(drift_data):
+    _, _, (_, _, bank) = drift_data
+    with pytest.raises(ValueError, match="temp_scale"):
+        poisoned_bank(bank, temp_scale=0.0)
+    bad = poisoned_bank(bank)
+    for ctx in bank.contexts:
+        good_t = bank.plan_for(ctx).temperatures
+        bad_t = bad.plan_for(ctx).temperatures
+        assert all(b == pytest.approx(0.05 * g) for g, b in zip(good_t, bad_t))
