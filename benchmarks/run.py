@@ -449,6 +449,115 @@ def bench_fleet(out_path="BENCH_fleet.json", scenario_names=None):
     )
 
 
+def bench_emit_obs(out_prefix="OBS"):
+    """Re-run the reference serving and fleet scenarios with the full
+    observability plane (`repro.obs`) attached and write the artifacts
+    next to the BENCH files:
+
+      {prefix}_serving_trace.jsonl   unsampled per-request trace
+      {prefix}_serving_metrics.json  metrics registry (JSON export)
+      {prefix}_serving_metrics.prom  same registry, Prometheus text
+      {prefix}_serving_audit.jsonl   online-controller decision audit
+      {prefix}_fleet_trace.jsonl     sampled trace of the >=100k fleet run
+      {prefix}_fleet_metrics.json/.prom
+      {prefix}_fleet_audit.jsonl     guarded poisoned-canary rollout audit
+                                     (holds the full trip->rollback chain)
+
+    Every artifact is cross-examined in-process with `repro.obs.check`
+    before returning (CI re-runs the CLI against the files); a violated
+    invariant fails the bench."""
+    from repro.core.calibration import TemperatureScaling
+    from repro.core.policy import OffloadPlan
+    from repro.fleet.scenarios import reference_fleet, run_fleet
+    from repro.obs import (
+        AuditLog,
+        JsonlTraceSink,
+        MetricsRegistry,
+        Observability,
+    )
+    from repro.obs.check import run_checks, verify_rollback_chain
+    from repro.obs.trace import read_jsonl
+    from repro.serving.scenarios import (
+        fit_drift_plans,
+        run_congested_markov,
+        synthetic_cascade_logits,
+        synthetic_distorted_cascade,
+    )
+
+    t_start = time.perf_counter()
+
+    # serving: the BENCH_serving controller arm, traced unsampled
+    exits, final, y = synthetic_cascade_logits(2048)
+    plan = OffloadPlan(
+        p_tar=0.8,
+        calibrators=[TemperatureScaling.from_temperature(1.0),
+                     TemperatureScaling.from_temperature(1.0)],
+    )
+    audit_s, metrics_s = AuditLog(), MetricsRegistry()
+    obs_s = Observability(
+        trace=JsonlTraceSink(f"{out_prefix}_serving_trace.jsonl"),
+        audit=audit_s, metrics=metrics_s,
+    )
+    run_congested_markov(plan, exits, final, y, n_requests=2000,
+                         with_controller=True, obs=obs_s)
+    obs_s.close()
+    metrics_s.write_json(f"{out_prefix}_serving_metrics.json")
+    metrics_s.write_prometheus(f"{out_prefix}_serving_metrics.prom")
+    audit_s.to_jsonl(f"{out_prefix}_serving_audit.jsonl")
+    errors = run_checks(
+        read_jsonl(f"{out_prefix}_serving_trace.jsonl"),
+        metrics_s, audit_s.records,
+    )
+
+    # fleet: the full reference fleet (>=100k requests), sampled trace
+    val, test = synthetic_distorted_cascade(
+        directions={"gaussian_blur": "under"}
+    )
+    _, _, bank = fit_drift_plans(val)
+    scn = reference_fleet(val=val, test=test)
+    sample_every = 101
+    metrics_f = MetricsRegistry()
+    obs_f = Observability(
+        trace=JsonlTraceSink(f"{out_prefix}_fleet_trace.jsonl"),
+        metrics=metrics_f, trace_sample_every=sample_every,
+    )
+    run_fleet(bank, scn, with_controller=True, obs=obs_f)
+    obs_f.close()
+    metrics_f.write_json(f"{out_prefix}_fleet_metrics.json")
+    metrics_f.write_prometheus(f"{out_prefix}_fleet_metrics.prom")
+    errors += run_checks(
+        read_jsonl(f"{out_prefix}_fleet_trace.jsonl"), metrics_f,
+    )
+
+    # fleet audit: a guarded poisoned-canary rollout, so the artifact CI
+    # cross-examines holds a complete trip -> rollback causal chain
+    from repro.orchestration.scenarios import _rollout_pieces, poisoned_bank
+
+    scn_small = reference_fleet(n_cells=8, requests_per_cell=300,
+                                cloud_servers=2, val=val, test=test)
+    orch, _, _ = _rollout_pieces(scn_small, poisoned_bank(bank))
+    audit_f = AuditLog()
+    run_fleet(bank, scn_small, orchestrator=orch,
+              obs=Observability(audit=audit_f))
+    audit_f.to_jsonl(f"{out_prefix}_fleet_audit.jsonl")
+    chain = verify_rollback_chain(audit_f.records)
+    if not chain["ok"]:
+        errors.append(f"rollback chain broken: {chain['why']}")
+    if errors:
+        raise AssertionError(
+            "obs invariants violated: " + "; ".join(errors[:5])
+        )
+
+    n_total = 2000 + scn.topology.n_requests
+    us = (time.perf_counter() - t_start) / n_total * 1e6
+    return us, (
+        f"fleet_requests={scn.topology.n_requests};"
+        f"trace_sample_every={sample_every};"
+        f"audit_records={len(audit_f)};rollback_chain=ok;"
+        f"artifacts={out_prefix}_*"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="skip figure benchmarks")
@@ -458,6 +567,13 @@ def main() -> None:
         default=None,
         help="comma-separated adversarial scenario names for the fleet "
         "bench (default: all registered; 'none' skips the matrix)",
+    )
+    ap.add_argument(
+        "--emit-obs",
+        action="store_true",
+        help="re-run the reference scenarios with the observability plane "
+        "attached and write OBS_* trace/metrics/audit artifacts next to "
+        "the BENCH files",
     )
     args, _ = ap.parse_known_args()
     if args.scenario is None or args.scenario == "all":
@@ -480,6 +596,8 @@ def main() -> None:
         ("fleet_simulator_per_request",
          *bench_fleet(scenario_names=scenario_names)),
     ]
+    if args.emit_obs:
+        rows.append(("observability_emit", *bench_emit_obs()))
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 

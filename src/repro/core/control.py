@@ -83,11 +83,14 @@ def windowed_mean(
     """Mean of the (t, value) observations in the trailing window.
 
     With no window (or no `now`), the mean over everything. With
-    `stale_fallback`, an empty window falls back to the most recent
-    observation at or before `now` (stale beats assuming the nominal
-    best case -- the bandwidth-estimate contract); without it, an empty
-    window is None (the queue-estimate contract). None when nothing was
-    ever observed."""
+    `stale_fallback`, an empty window falls back to the single nearest
+    observation: the most recent one at or before `now`, or -- when every
+    observation post-dates `now`, as happens on a congested fleet cell
+    whose in-flight transfers are priced at their future ready times --
+    the earliest upcoming one (stale beats assuming the nominal best
+    case -- the bandwidth-estimate contract). Without `stale_fallback`,
+    an empty window is None (the queue-estimate contract). None only
+    when nothing was ever observed."""
     t = np.asarray(times, np.float64)
     v = np.asarray(values, np.float64)
     if t.size == 0:
@@ -98,9 +101,11 @@ def windowed_mean(
     in_win = past & (t >= now - window_s)
     if in_win.any():
         return float(v[in_win].mean())
-    if not stale_fallback or not past.any():
+    if not stale_fallback:
         return None
-    return float(v[past][np.argmax(t[past])])
+    if past.any():
+        return float(v[past][np.argmax(t[past])])
+    return float(v[np.argmin(t)])
 
 
 def windowed_rate(times, window_s: float, now: float) -> Optional[float]:
@@ -369,6 +374,7 @@ def choose_with_concession(
     distress_utilization: float,
     min_accuracy: Optional[float] = None,
     max_reliability_gap: Optional[float] = None,
+    force_concession: bool = False,
 ) -> dict:
     """Distress-gated p_tar concession (the fleet's per-cell rule).
 
@@ -380,21 +386,31 @@ def choose_with_concession(
        the highest p_tar, fastest within it.
     3. No stable row at all: fastest feasible; no feasible row: most
        accurate (the `rescore_plan` degradation rule).
+
+    `force_concession` is the QoS monitor's distress override: a cell
+    whose declared SLO has TRIPPED stops holding the operator's contract
+    p_tar (stage 1 is skipped) and takes the fastest stable feasible
+    row -- the rescue configuration -- until the monitor clears it. The
+    model-side feasibility caps (`min_accuracy`, `max_reliability_gap`)
+    still bind; only the latency-vs-contract preference flips.
     """
     feasible = [
         r for r in table if row_feasible(r, min_accuracy, max_reliability_gap)
     ]
-    full = [
-        r for r in feasible
-        if r["p_tar"] == contract_p_tar
-        and r["uplink_utilization"] < distress_utilization
-    ]
-    if full:
-        return min(full, key=lambda r: r["expected_latency_s"])
+    if not force_concession:
+        full = [
+            r for r in feasible
+            if r["p_tar"] == contract_p_tar
+            and r["uplink_utilization"] < distress_utilization
+        ]
+        if full:
+            return min(full, key=lambda r: r["expected_latency_s"])
     stable = [
         r for r in feasible if r["uplink_utilization"] < distress_utilization
     ]
     if stable:
+        if force_concession:
+            return min(stable, key=lambda r: r["expected_latency_s"])
         return min(stable, key=lambda r: (-r["p_tar"], r["expected_latency_s"]))
     if feasible:
         return min(feasible, key=lambda r: r["expected_latency_s"])

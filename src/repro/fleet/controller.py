@@ -107,6 +107,10 @@ class FleetController:
                    + (self.plan.p_tar,)}
             )
         self.history: List[Tuple[float, List[Tuple[int, float]]]] = []
+        #: optional repro.obs.AuditLog (injected by `run_fleet(obs=...)` /
+        #: FleetSimulator); records per-cell rescore evidence + decisions
+        self.audit = None
+        self._last_decisions: Optional[List[Tuple[int, float]]] = None
 
     @property
     def branches(self) -> List[int]:
@@ -132,7 +136,7 @@ class FleetController:
         return dict(zip(telemetry.context_keys, np.asarray(raw, np.float64)))
 
     def update(
-        self, t: float, telemetry, active=None
+        self, t: float, telemetry, active=None, distressed=None
     ) -> List[Tuple[int, float]]:
         """-> per-cell (physical branch, p_tar) decisions.
 
@@ -141,14 +145,22 @@ class FleetController:
         shed service on other cells' links -- and instead parks at the
         plan's deployment, the state it must come back up in. It also
         contributes zero load to the shared-cloud pass (its arrivals are
-        priced on the host cell that serves them)."""
+        priced on the host cell that serves them).
+
+        `distressed` (orchestrated runs with a QoS monitor): a (C,) bool
+        mask of cells whose declared SLO is TRIPPED. A distressed cell
+        stops holding the contract p_tar and takes the fastest stable
+        feasible candidate (`choose_with_concession(force_concession=
+        True)`) until the monitor clears it -- the trip verdict IS the
+        distress signal, not a second utilization heuristic."""
         cfg = self.config
-        chosen_rows, tables, rates = [], [], []
+        chosen_rows, tables, rates, inputs = [], [], [], []
         for c in range(self.n_cells):
             if active is not None and not active[c]:
                 chosen_rows.append(None)
                 tables.append(None)
                 rates.append(0.0)
+                inputs.append(None)
                 continue
             bw = telemetry.bandwidth_estimate(c, cfg.window_s, now=t)
             if bw is None:
@@ -169,15 +181,21 @@ class FleetController:
                     self._cell_mix(telemetry, c, t)
                 ),
             )
+            force = bool(distressed is not None and distressed[c])
             chosen_rows.append(
                 choose_with_concession(
                     table, self.plan.p_tar, cfg.distress_utilization,
                     min_accuracy=cfg.min_accuracy,
                     max_reliability_gap=cfg.max_reliability_gap,
+                    force_concession=force,
                 )
             )
             tables.append(table)
             rates.append(rate_hz or 0.0)
+            inputs.append({"bandwidth_bps": float(bw),
+                           "arrival_rate_hz": None if rate_hz is None
+                           else float(rate_hz),
+                           "distressed": force})
 
         if cfg.cloud_rho_max is not None:
             chosen_rows = self._shared_cloud_pass(chosen_rows, tables, rates)
@@ -187,8 +205,33 @@ class FleetController:
             hold if r is None else (r["exit_index"] + 1, float(r["p_tar"]))
             for r in chosen_rows
         ]
+        if self.audit is not None:
+            self._audit_decisions(t, decisions, chosen_rows, inputs)
+        self._last_decisions = decisions
         self.history.append((t, decisions))
         return decisions
+
+    def _audit_decisions(self, t, decisions, chosen_rows, inputs) -> None:
+        """One audit record per cell whose decision changed or that is
+        under QoS distress -- the evidence (measured inputs + chosen
+        candidate row) a concession must be reconstructible from."""
+        prev = self._last_decisions
+        for c, (d, row, inp) in enumerate(zip(decisions, chosen_rows, inputs)):
+            if inp is None:
+                continue  # parked (inactive) cell: no rescore happened
+            changed = prev is None or prev[c] != d
+            if not (changed or inp["distressed"]):
+                continue
+            chosen = {"branch": int(d[0]), "p_tar": float(d[1])}
+            if row is not None:
+                chosen.update(
+                    offload_prob=float(row["offload_prob"]),
+                    expected_latency_s=float(row["expected_latency_s"]),
+                    uplink_utilization=float(row["uplink_utilization"]),
+                )
+            self.audit.record(
+                t, "fleet_controller", "controller_rescore", cell=c,
+                changed=bool(changed), chosen=chosen, **inp)
 
     # ---------------------------------------------------- shared-cloud cap
     def _feasible(self, row) -> bool:

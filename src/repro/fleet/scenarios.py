@@ -129,6 +129,7 @@ def run_fleet(
     backend=None,
     orchestrator=None,
     fleet_config: Optional[FleetConfig] = None,
+    obs=None,
 ) -> FleetTelemetry:
     """Serve the scenario's test split with a plan or expert bank.
 
@@ -142,6 +143,8 @@ def run_fleet(
     orchestration plane (`repro.orchestration`) driving churn, QoS
     monitoring, and rollouts; `fleet_config` overrides the simulator
     config (e.g. cloud brownout intervals) and wins over `window_s`.
+    `obs` attaches a `repro.obs.Observability` bundle (sampled traces,
+    decision audit log, metrics); None (the default) is zero-perturbation.
     """
     profile = profile or L.paper_2020()
     val = scenario.val
@@ -164,6 +167,6 @@ def run_fleet(
     sim = FleetSimulator(
         table, scenario.topology, profile,
         config=fleet_config or FleetConfig(window_s=window_s),
-        controller=controller, orchestrator=orchestrator,
+        controller=controller, orchestrator=orchestrator, obs=obs,
     )
     return sim.run()

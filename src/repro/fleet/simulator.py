@@ -196,12 +196,25 @@ class FleetSimulator:
         controller=None,
         payload_nbytes: Optional[Callable[[int], int]] = None,
         orchestrator=None,
+        obs=None,
     ):
         self.table = table
         self.topology = topology
         self.profile = profile
         self.config = config or FleetConfig()
         self.orchestrator = orchestrator
+        # observability (repro.obs.Observability). Zero-perturbation: the
+        # obs=None path adds no columns and runs no emission; pinned
+        # bit-exactly by tests/test_obs.py. Trace emission is SAMPLED
+        # (obs.trace_sample_every) and happens after the deferred cloud
+        # solve, from the final patched columns.
+        self.obs = obs
+        self._tracing = obs is not None and obs.trace is not None
+        self._metrics = None if obs is None else obs.metrics
+        self._audit = None if obs is None else obs.audit
+        if obs is not None and obs.audit is not None \
+                and controller is not None and hasattr(controller, "audit"):
+            controller.audit = obs.audit
         if self.config.window_s <= 0:
             raise ValueError("window_s must be positive")
         self.controller = controller
@@ -345,7 +358,7 @@ class FleetSimulator:
         jobs = _CloudJobs()
         window_cols = []  # (cell, dict of columns), patched by the cloud solve
         if orch is not None:
-            orch.attach(self, tel)
+            orch.attach(self, tel, audit=self._audit)
         for w in range(n_windows):
             t0, t1 = w * cfg.window_s, (w + 1) * cfg.window_s
             if orch is not None:
@@ -376,6 +389,8 @@ class FleetSimulator:
                     serve_c, cols = self._shed_window(
                         c, cell, lo, hi, dev_free, tel
                     )
+                if self._tracing:
+                    cols["serve_cell"] = serve_c
                 est = cols["est_id"]
                 tel.observe_contexts(
                     serve_c if serve_c >= 0 else c,
@@ -384,6 +399,12 @@ class FleetSimulator:
                              np.where(est == -2, cols["ctx_id"], -1)),
                 )
                 off = ~cols["on_device"]
+                if self._metrics is not None:
+                    self._metrics.inc("fleet_requests_total", hi - lo, cell=c)
+                    n_off = int(off.sum())
+                    if n_off:
+                        self._metrics.inc("fleet_offloaded_total", n_off,
+                                          cell=c)
                 if off.any():
                     branch = int(cols["branch"][0])
                     order = np.argsort(cols["edge_done"][off], kind="stable")
@@ -416,6 +437,10 @@ class FleetSimulator:
                     service = L.cloud_time(self.profile, branch)
                     if cfg.cloud_slowdowns:
                         service = service * self._cloud_scale_at(done)
+                    if self._tracing:
+                        cols["uplink_start"][pos] = done - comm
+                        cols["uplink_done"][pos] = done
+                        cols["cloud_service"][pos] = service
                     jobs.add(done, service, len(window_cols), pos)
                     if self._live is not None:
                         self._live.add(done, service, c,
@@ -426,6 +451,8 @@ class FleetSimulator:
 
         self._cloud_solve(jobs, window_cols)
         self._flush(window_cols, tel)
+        if self.obs is not None and self.obs.enabled:
+            self._finish_obs(window_cols, tel)
         if orch is not None:
             orch.finish(self, tel, n_windows * cfg.window_s)
         return tel
@@ -502,7 +529,7 @@ class FleetSimulator:
         conf, pred, on = table.gate_window(ctx_ids, samples, branch, p_tar)
         est = table.est_ids(ctx_ids, samples)
         correct = table.correct(samples, pred)
-        return {
+        cols = {
             "arrival": arr,
             "samples": samples,
             "edge_done": edge_done,
@@ -519,6 +546,23 @@ class FleetSimulator:
             "p_tar": np.full(n, p_tar),
             "deadline": deadline_s,
         }
+        if self._tracing:
+            self._add_trace_cols(cols, conf)
+        return cols
+
+    def _add_trace_cols(self, cols, conf) -> None:
+        """Extra per-request columns kept ONLY while a trace sink is
+        attached (never fed to telemetry): the gate confidence, plus the
+        uplink/cloud span timestamps `run` stamps after the FIFO solves.
+        conf=None marks a backhauled window where no gate ran."""
+        n = len(cols["arrival"])
+        cols["conf"] = (
+            np.full(n, np.nan) if conf is None
+            else np.asarray(conf, np.float64)
+        )
+        cols["uplink_start"] = np.full(n, np.nan)
+        cols["uplink_done"] = np.full(n, np.nan)
+        cols["cloud_service"] = np.full(n, np.nan)
 
     def _shed_window(self, c, cell, lo, hi, dev_free, tel):
         """A dead cell's window: serve it on the nearest ACTIVE ring
@@ -532,6 +576,8 @@ class FleetSimulator:
         samples = wl.sample[lo:hi]
         n = hi - lo
         self.shed_counts[c] += n
+        if self._metrics is not None:
+            self._metrics.inc("fleet_shed_total", n, cell=c)
         for s in self.topology.shed_order(c):
             if self._active[s]:
                 host = self.topology.cells[int(s)]
@@ -543,10 +589,18 @@ class FleetSimulator:
                     ctx_cell=c, deadline_s=cell.deadline_s,
                 )
                 tel.observe_shed_arrivals(int(s), arr)
+                if self._audit is not None:
+                    self._audit.record(
+                        float(arr[0]), "simulator", "shed_route", cell=c,
+                        host_cell=int(s), backhaul=False, requests=int(n))
                 return int(s), cols
         # whole-fleet outage: every request offloads over the backhaul
+        if self._audit is not None:
+            self._audit.record(
+                float(arr[0]), "simulator", "shed_route", cell=c,
+                host_cell=None, backhaul=True, requests=int(n))
         branch, p_tar = self._state[c]
-        return -1, {
+        cols = {
             "arrival": arr,
             "samples": samples,
             "edge_done": arr.copy(),
@@ -559,6 +613,9 @@ class FleetSimulator:
             "p_tar": np.full(n, p_tar),
             "deadline": cell.deadline_s,
         }
+        if self._tracing:
+            self._add_trace_cols(cols, None)
+        return -1, cols
 
     # ---------------------------------------------------------- cloud tier
     def _cloud_solve(self, jobs, window_cols):
@@ -613,10 +670,110 @@ class FleetSimulator:
                 missed=missed,
             )
 
+    # ------------------------------------------------------- observability
+    def _finish_obs(self, window_cols, tel) -> None:
+        """Post-run export: conservation gauges (expected vs completed vs
+        offloaded, straight from the final patched columns), the fleet
+        telemetry summary as gauges, then sampled trace emission."""
+        if self._metrics is not None:
+            from repro.obs import fleet_metrics
+
+            offloaded = sum(
+                int((~cols["on_device"]).sum()) for _, cols in window_cols
+            )
+            self._metrics.set_gauge(
+                "fleet_requests_expected", self.topology.n_requests
+            )
+            self._metrics.set_gauge("fleet_requests_completed", tel.requests())
+            self._metrics.set_gauge("fleet_offloaded_telemetry", offloaded)
+            if self._tracing:
+                self._metrics.set_gauge(
+                    "trace_sample_every",
+                    max(1, int(self.obs.trace_sample_every)),
+                    source="fleet",
+                )
+            fleet_metrics(tel, self._metrics)
+        if self._tracing:
+            self._emit_traces(window_cols)
+
+    def _emit_traces(self, window_cols) -> None:
+        """Emit sampled per-request trace records from the final patched
+        columns. Sampling is a deterministic global stride over the
+        flattened window order, so a run emits the same records every
+        time; req_id is the request's global index in that order. Edge
+        service start is recovered exactly (deterministic service time);
+        uplink/cloud span edges were stamped during the FIFO solves."""
+        from repro.obs import build_spans, request_record
+
+        sink = self.obs.trace
+        every = max(1, int(self.obs.trace_sample_every))
+        ctx_keys = self.table.ctx_keys
+        bank_keys = self.table.bank_keys
+        counter = 0
+        emitted = 0
+        for c, cols in window_cols:
+            n = len(cols["arrival"])
+            backhaul = int(cols["serve_cell"]) < 0
+            branch = int(cols["branch"][0])
+            s_edge = 0.0 if backhaul else L.edge_time(self.profile, branch)
+            for i in range((-counter) % every, n, every):
+                arrival = float(cols["arrival"][i])
+                edge_done = float(cols["edge_done"][i])
+                complete = float(cols["complete"][i])
+                on = bool(cols["on_device"][i])
+                edge_start = edge_done - s_edge
+                if on:
+                    spans = build_spans(arrival, edge_start, edge_done)
+                else:
+                    spans = build_spans(
+                        arrival, edge_start, edge_done,
+                        uplink_start_s=float(cols["uplink_start"][i]),
+                        uplink_done_s=float(cols["uplink_done"][i]),
+                        cloud_start_s=(
+                            complete - float(cols["cloud_service"][i])
+                        ),
+                        complete_s=complete,
+                    )
+                if backhaul:
+                    gate = None  # no gate ran: the window went straight up
+                else:
+                    ctx_id = int(cols["ctx_id"][i])
+                    est_id = int(cols["est_id"][i])
+                    gate = {
+                        "branch": branch,
+                        "p_tar": float(cols["p_tar"][i]),
+                        "confidence": float(cols["conf"][i]),
+                        "criterion": "confidence",
+                        "context": ctx_keys[ctx_id] if ctx_id >= 0 else None,
+                        "est_context": (
+                            bank_keys[est_id]
+                            if bank_keys and 0 <= est_id < len(bank_keys)
+                            else None
+                        ),
+                    }
+                sink.emit(request_record(
+                    "fleet", counter + i, arrival, complete, on, spans,
+                    gate=gate, cell=c,
+                ))
+                emitted += 1
+            counter += n
+        if self._metrics is not None and emitted:
+            self._metrics.inc("trace_records_total", emitted, source="fleet")
+
     # ---------------------------------------------------------- controller
     def _apply_controller(self, t: float, tel: FleetTelemetry) -> None:
         if self.orchestrator is not None:
-            decisions = self.controller.update(t, tel, active=self._active)
+            mon = getattr(self.orchestrator, "monitor", None)
+            if mon is not None:
+                # satellite wiring (ROADMAP): the QoS monitor's trip verdict
+                # IS the controller's distress signal -- a tripped cell takes
+                # the rescue concession until the monitor clears it
+                decisions = self.controller.update(
+                    t, tel, active=self._active,
+                    distressed=mon.tripped_mask(),
+                )
+            else:
+                decisions = self.controller.update(t, tel, active=self._active)
         else:
             decisions = self.controller.update(t, tel)
         if len(decisions) != self.topology.n_cells:

@@ -1,0 +1,48 @@
+"""Summary-metric export: telemetry roll-ups -> MetricsRegistry gauges.
+
+The simulators populate *counters* live (requests, offloads, sheds,
+trace records) because those feed conservation checks; the headline
+aggregates (p99, gap, miss rate) are computed once at the end by the
+telemetry objects, and this module maps them onto gauges so one
+registry holds both views. `benchmarks/run.py --emit-obs` writes the
+result as JSON + Prometheus text next to the BENCH files.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from .metrics import MetricsRegistry
+
+
+def _set_finite(reg: MetricsRegistry, name: str, value, **labels) -> None:
+    if value is None:
+        return
+    v = float(value)
+    if math.isnan(v) or math.isinf(v):
+        return
+    reg.set_gauge(name, v, **labels)
+
+
+def serving_metrics(telemetry,
+                    registry: Optional[MetricsRegistry] = None) -> MetricsRegistry:
+    """Gauges from a `repro.serving.telemetry.Telemetry` summary."""
+    reg = registry if registry is not None else MetricsRegistry()
+    s = telemetry.summary()
+    for k, v in s.items():
+        _set_finite(reg, f"serving_{k}", v)
+    return reg
+
+
+def fleet_metrics(telemetry, registry: Optional[MetricsRegistry] = None,
+                  per_cell: bool = True) -> MetricsRegistry:
+    """Gauges from a `repro.fleet.telemetry.FleetTelemetry`: the fleet
+    summary plus (optionally) the operator's per-cell table."""
+    reg = registry if registry is not None else MetricsRegistry()
+    for k, v in telemetry.fleet_summary().items():
+        _set_finite(reg, f"fleet_{k}", v)
+    if per_cell:
+        for c in range(telemetry.n_cells):
+            for k, v in telemetry.cell_summary(c).items():
+                _set_finite(reg, f"fleet_cell_{k}", v, cell=c)
+    return reg

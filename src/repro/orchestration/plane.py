@@ -19,7 +19,7 @@ from typing import Optional
 
 from repro.orchestration.churn import JOIN, ChurnSchedule
 from repro.orchestration.qos import QoSMonitor
-from repro.orchestration.rollout import RolloutManager
+from repro.orchestration.rollout import CANARY, PROMOTED, ROLLED_BACK, RolloutManager
 
 
 class Orchestrator:
@@ -38,11 +38,13 @@ class Orchestrator:
         self.monitor = monitor
         self.rollout = rollout
         self._cursor = 0
+        self._audit = None  # repro.obs.AuditLog, injected via attach
 
     # ------------------------------------------------------ simulator hooks
-    def attach(self, sim, tel) -> None:
+    def attach(self, sim, tel, audit=None) -> None:
         n = sim.topology.n_cells
         self._cursor = 0
+        self._audit = audit
         if self.churn is not None:
             for ev in self.churn.events:
                 if ev.cell >= n:
@@ -67,14 +69,45 @@ class Orchestrator:
                 tel.record_orchestration(
                     t0, f"churn_{ev.kind}", cell=ev.cell, scheduled_t_s=ev.t_s
                 )
+                if self._audit is not None:
+                    self._audit.record(t0, "churn", f"churn_{ev.kind}",
+                                       cell=int(ev.cell),
+                                       scheduled_t_s=float(ev.t_s))
         if self.monitor is not None:
             result = self.monitor.observe(tel, t0)
+            evidence = result.get("evidence", {})
             for c, metric in result["tripped"]:
                 tel.record_orchestration(t0, "qos_trip", cell=int(c), metric=metric)
+                if self._audit is not None:
+                    self._audit.record(t0, "qos_monitor", "qos_trip",
+                                       cell=int(c), **evidence.get(c, {}))
             for c in result["cleared"]:
                 tel.record_orchestration(t0, "qos_clear", cell=int(c))
+                if self._audit is not None:
+                    self._audit.record(t0, "qos_monitor", "qos_clear",
+                                       cell=int(c), **evidence.get(c, {}))
         if self.rollout is not None:
+            before = self.rollout.state
             self.rollout.step(sim, tel, self.monitor, t0)
+            after = self.rollout.state
+            if self._audit is not None and after != before:
+                rm = self.rollout
+                if after == CANARY:
+                    self._audit.record(
+                        t0, "rollout_manager", "rollout_canary",
+                        bank_version=rm.candidate.bank_version,
+                        incumbent_version=rm.incumbent_version,
+                        cells=list(rm.canary_cells))
+                elif after == ROLLED_BACK:
+                    self._audit.record(
+                        t0, "rollout_manager", "rollout_rollback",
+                        bank_version=rm.candidate.bank_version,
+                        restored_version=rm.incumbent_version,
+                        tripped=list(rm.tripped_canaries))
+                elif after == PROMOTED:
+                    self._audit.record(
+                        t0, "rollout_manager", "rollout_promote",
+                        bank_version=rm.candidate.bank_version)
 
     def finish(self, sim, tel, t_end: float) -> None:
         tel.record_orchestration(

@@ -110,6 +110,11 @@ class QoSMonitor:
     def tripped_cells(self) -> np.ndarray:
         return np.flatnonzero(self._tripped)
 
+    def tripped_mask(self) -> np.ndarray:
+        """Boolean per-cell trip state -- the distress signal the fleet
+        controller consumes (`FleetController.update(distressed=...)`)."""
+        return self._tripped.copy()
+
     def violation(self, qos: Dict[str, float]) -> Optional[str]:
         """One window's verdict: None = no verdict (no watched metric had
         enough evidence), '' = clean, otherwise the name of the first
@@ -141,16 +146,19 @@ class QoSMonitor:
     # ------------------------------------------------------------- observe
     def observe(self, tel, now: float) -> Dict[str, list]:
         """Evaluate every watched cell's trailing window at `now` ->
-        {"tripped": [(cell, metric), ...], "cleared": [cell, ...]} for the
-        transitions THIS pass caused (already-tripped cells staying bad
-        report nothing)."""
+        {"tripped": [(cell, metric), ...], "cleared": [cell, ...],
+        "evidence": {cell: {...}}} for the transitions THIS pass caused
+        (already-tripped cells staying bad report nothing). `evidence`
+        carries, per transitioning cell, the windowed metric value, the
+        SLO cap, and the streak that crossed the hysteresis threshold --
+        the audit trail a trip must be reconstructible from."""
         watch = range(self._n) if self.cells is None else self.cells
         tripped: List[Tuple[int, str]] = []
         cleared: List[int] = []
+        evidence: Dict[int, Dict] = {}
         for c in watch:
-            verdict = self.violation(
-                tel.cell_qos_estimate(c, self.config.window_s, now)
-            )
+            qos = tel.cell_qos_estimate(c, self.config.window_s, now)
+            verdict = self.violation(qos)
             if verdict is None:
                 continue
             if verdict:
@@ -160,6 +168,14 @@ class QoSMonitor:
                     self._tripped[c] = True
                     tripped.append((c, verdict))
                     self.trip_log.append((now, c, verdict))
+                    evidence[c] = {
+                        "metric": verdict,
+                        "value": float(qos[verdict]),
+                        "cap": float(getattr(self.slo, verdict)),
+                        "bad_streak": int(self._bad[c]),
+                        "requests": int(qos["requests"]),
+                        "gate_samples": int(qos["gate_samples"]),
+                    }
             else:
                 self._good[c] += 1
                 self._bad[c] = 0
@@ -167,4 +183,5 @@ class QoSMonitor:
                     self._tripped[c] = False
                     cleared.append(c)
                     self.clear_log.append((now, c))
-        return {"tripped": tripped, "cleared": cleared}
+                    evidence[c] = {"good_streak": int(self._good[c])}
+        return {"tripped": tripped, "cleared": cleared, "evidence": evidence}

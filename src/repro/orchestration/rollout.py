@@ -79,6 +79,7 @@ class RolloutManager:
                 tel.record_orchestration(
                     now, "rollout_canary",
                     bank_version=self.candidate.bank_version,
+                    incumbent_version=self.incumbent_version,
                     cells=list(self.canary_cells),
                 )
         elif self.state == CANARY:
@@ -92,6 +93,7 @@ class RolloutManager:
                 tel.record_orchestration(
                     now, "rollout_rollback",
                     bank_version=self.candidate.bank_version,
+                    restored_version=self.incumbent_version,
                     tripped=bad,
                 )
             else:

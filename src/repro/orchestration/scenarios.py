@@ -350,20 +350,29 @@ def poisoned_canary(quick: bool = False, seed: int = 0) -> dict:
     manager canaries it on two cells; their on-device reliability gap
     blows the SLO, the monitor trips, and the fleet rolls back to the
     incumbent. Unguarded arm: the same bank promoted fleet-wide
-    immediately. Required: the rollback happens, and the guarded fleet's
-    gap stays within 1.5x the incumbent's while the unguarded one
-    does not."""
+    immediately. Required: the rollback happens, the guarded fleet's
+    gap stays within 1.5x the incumbent's while the unguarded one does
+    not, AND the whole trip -> rollback causal chain reconstructs from
+    the guarded arm's decision audit log alone
+    (`repro.obs.check.verify_rollback_chain`)."""
+    from repro.obs import AuditLog, Observability
+    from repro.obs.check import verify_rollback_chain
+
     val, test = _drift_data(seed)
     _, _, bank = _plans(seed)
     size = _quick_size(quick)
     scn = reference_fleet(seed=seed, val=val, test=test, **size)
     bad = poisoned_bank(bank)
     orch, monitor, rollout = _rollout_pieces(scn, bad)
+    audit = AuditLog()
 
     incumbent = _summary(run_fleet(bank, scn))
-    guarded = _summary(run_fleet(bank, scn, orchestrator=orch))
+    guarded = _summary(
+        run_fleet(bank, scn, orchestrator=orch, obs=Observability(audit=audit))
+    )
     unguarded = _summary(run_fleet(bad, scn))
 
+    chain = verify_rollback_chain(audit.records)
     rolled_back = rollout.state == ROLLED_BACK
     gap_i = incumbent["miscalibration_gap"]
     gap_g = guarded["miscalibration_gap"]
@@ -377,8 +386,9 @@ def poisoned_canary(quick: bool = False, seed: int = 0) -> dict:
         "gap_contained": {"incumbent": gap_i, "guarded": gap_g,
                           "unguarded": gap_u, "cap": 1.5 * gap_i,
                           "win": contained and damage_shown},
+        "audit_chain": {"win": chain["ok"], "why": chain["why"]},
     }
-    ok = rolled_back and contained and damage_shown
+    ok = rolled_back and contained and damage_shown and chain["ok"]
     return _record(
         "poisoned_canary",
         {"incumbent": incumbent, "guarded_rollout": guarded,
@@ -386,7 +396,8 @@ def poisoned_canary(quick: bool = False, seed: int = 0) -> dict:
         wins,
         {"trips": [(t, int(c), m) for t, c, m in monitor.trip_log],
          "rollout_state": rollout.state,
-         "candidate_version": bad.bank_version},
+         "candidate_version": bad.bank_version,
+         "audit_records": len(audit)},
         ok,
     )
 

@@ -87,6 +87,9 @@ class OnlineController:
         self.plan = self.core.plan
         self.profile = profile
         self.history: List[Tuple[float, float, int, float]] = []  # (t, bw, branch, p_tar)
+        #: optional repro.obs.AuditLog; ServingRuntime injects it when an
+        #: Observability bundle is attached. Purely write-only evidence.
+        self.audit = None
 
     @property
     def branches(self) -> List[int]:
@@ -137,6 +140,19 @@ class OnlineController:
             max_reliability_gap=cfg.max_reliability_gap,
         ):
             candidate = self.plan  # not worth churning the fleet
+        held = candidate is self.plan
+        prev = self.plan
         self.plan = candidate
         self.history.append((t, bw, candidate.exit_index + 1, candidate.p_tar))
+        if self.audit is not None:
+            self.audit.record(
+                t, "online_controller", "controller_rescore",
+                bandwidth_bps=float(bw),
+                arrival_rate_hz=None if rate_hz is None else float(rate_hz),
+                held=bool(held),
+                changed=bool(candidate.exit_index != prev.exit_index
+                             or candidate.p_tar != prev.p_tar),
+                chosen={"branch": candidate.exit_index + 1,
+                        "p_tar": float(candidate.p_tar)},
+            )
         return candidate

@@ -179,6 +179,10 @@ class _Pending:
     payload_nbytes: int
     context: Optional[str] = None  # true distortion context at gate time
     est_context: Optional[str] = None  # what the edge-side estimator said
+    # span timestamps, stamped only while a trace sink is attached
+    uplink_start_s: float = 0.0
+    uplink_done_s: float = 0.0
+    cloud_start_s: float = 0.0
 
 
 class ServingRuntime:
@@ -201,6 +205,7 @@ class ServingRuntime:
         controller=None,
         telemetry: Optional[Telemetry] = None,
         payload_nbytes: Optional[Callable[[int], int]] = None,
+        obs=None,
     ):
         from repro.core.bank import PlanBank
 
@@ -217,6 +222,17 @@ class ServingRuntime:
         self.config = config or RuntimeConfig()
         self.controller = controller
         self.telemetry = telemetry or Telemetry()
+        # observability (repro.obs.Observability); zero-perturbation when
+        # absent -- the obs=None path runs operation-for-operation the
+        # same code, pinned bit-exactly by tests/test_obs.py
+        self.obs = obs
+        self._trace = None if obs is None else obs.trace
+        self._metrics = None if obs is None else obs.metrics
+        if obs is not None and obs.audit is not None \
+                and controller is not None and hasattr(controller, "audit"):
+            controller.audit = obs.audit
+        if self._metrics is not None:
+            self._metrics.set_gauge("trace_sample_every", 1, source="serving")
         if payload_nbytes is None:
             from repro.models.convnet import payload_bytes  # the paper's model
 
@@ -274,6 +290,10 @@ class ServingRuntime:
             t, _, fn, args = heapq.heappop(self._heap)
             self._now = t
             fn(t, *args)
+        if self._metrics is not None:
+            from repro.obs import serving_metrics
+
+            serving_metrics(self.telemetry, self._metrics)
         return self.telemetry
 
     # ---------------------------------------------------------- edge tier
@@ -334,6 +354,9 @@ class ServingRuntime:
                     est_context=est,
                 )
             )
+            if self.obs is not None and self.obs.enabled:
+                self._observe_complete(req, d, branch, p_tar, conf, ctx, est,
+                                       start_s, t, on_device=True)
         else:
             self._batch.append(
                 _Pending(req, branch, p_tar, conf, start_s, t,
@@ -370,6 +393,9 @@ class ServingRuntime:
         self.telemetry.observe_bandwidth(t, self.network.rate_bps(start))
         done = start + self.network.comm_time(nbytes, start)
         self._uplink_free_s = done
+        if self._trace is not None:
+            for p in batch:
+                p.uplink_start_s, p.uplink_done_s = start, done
         self._push(done, self._on_uplink_done, batch)
 
     # ----------------------------------------------------------- cloud tier
@@ -379,6 +405,9 @@ class ServingRuntime:
         service = sum(L.cloud_time(self.profile, p.branch) for p in batch)
         done = start + service
         self._cloud_free_s[i] = done
+        if self._trace is not None:
+            for p in batch:
+                p.cloud_start_s = start
         self._push(done, self._on_cloud_done, batch)
 
     def _on_cloud_done(self, t: float, batch: List[_Pending]) -> None:
@@ -407,6 +436,53 @@ class ServingRuntime:
                     est_context=p.est_context,
                 )
             )
+            if self.obs is not None and self.obs.enabled:
+                self._observe_complete(
+                    p.request, p.request.device % self.config.n_devices,
+                    p.branch, p.p_tar, p.confidence, p.context,
+                    p.est_context, p.edge_start_s, p.edge_done_s,
+                    on_device=False, uplink_start_s=p.uplink_start_s,
+                    uplink_done_s=p.uplink_done_s,
+                    cloud_start_s=p.cloud_start_s, complete_s=t,
+                )
+
+    # -------------------------------------------------------- observability
+    def _observe_complete(
+        self, req: Request, d: int, branch: int, p_tar: float, conf: float,
+        ctx, est, edge_start_s: float, edge_done_s: float, on_device: bool,
+        uplink_start_s: Optional[float] = None,
+        uplink_done_s: Optional[float] = None,
+        cloud_start_s: Optional[float] = None,
+        complete_s: Optional[float] = None,
+    ) -> None:
+        """Trace + metrics for one completed request (sinks attached)."""
+        from repro.obs import build_spans, request_record
+
+        complete = edge_done_s if complete_s is None else complete_s
+        if self._metrics is not None:
+            self._metrics.inc("serving_requests_total",
+                              path="edge" if on_device else "cloud")
+            self._metrics.observe("serving_latency_ms",
+                                  (complete - req.arrival_s) * 1e3)
+        if self._trace is None:
+            return
+        gate = {
+            "branch": int(branch),
+            "p_tar": float(p_tar),
+            "confidence": float(conf),
+            "criterion": getattr(self.core, "criterion",
+                                 getattr(self.plan, "criterion", None)),
+            "context": ctx,
+            "est_context": est,
+        }
+        spans = build_spans(req.arrival_s, edge_start_s, edge_done_s,
+                            uplink_start_s, uplink_done_s, cloud_start_s,
+                            complete_s)
+        self._trace.emit(request_record(
+            "serving", req.req_id, req.arrival_s, complete, on_device,
+            spans, gate=gate, device=d))
+        if self._metrics is not None:
+            self._metrics.inc("trace_records_total", source="serving")
 
     # ----------------------------------------------------------- controller
     def _on_controller_tick(self, t: float) -> None:

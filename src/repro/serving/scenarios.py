@@ -78,6 +78,7 @@ def run_congested_markov(
     with_controller: bool = False,
     controller_config: Optional[ControllerConfig] = None,
     profile: Optional[L.LatencyProfile] = None,
+    obs=None,
 ) -> Telemetry:
     profile = profile or L.paper_2020()
     core = LogitsCore(exit_logits, final_logits, plan, labels=labels)
@@ -96,7 +97,7 @@ def run_congested_markov(
         core, profile, plan, reqs,
         network=congested_markov_network(),
         config=RuntimeConfig(max_batch=4, batch_window_s=0.02),
-        controller=controller,
+        controller=controller, obs=obs,
     )
     return rt.run()
 
@@ -307,6 +308,7 @@ def run_distortion_drift(
     controller_interval_s: float = 1.0,
     context_aware: bool = False,
     controller_config: Optional[ControllerConfig] = None,
+    obs=None,
 ) -> Telemetry:
     """Serve `test` under severity drift with a plan or an expert bank.
 
@@ -362,6 +364,6 @@ def run_distortion_drift(
     rt = ServingRuntime(
         core, profile, plan_or_bank, reqs,
         config=RuntimeConfig(max_batch=4, batch_window_s=0.02),
-        controller=controller,
+        controller=controller, obs=obs,
     )
     return rt.run()

@@ -18,6 +18,7 @@ DOC_FILES = [
     ROOT / "docs" / "calibration.md",
     ROOT / "docs" / "fleet.md",
     ROOT / "docs" / "orchestration.md",
+    ROOT / "docs" / "observability.md",
 ]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.S)

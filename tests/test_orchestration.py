@@ -212,6 +212,99 @@ def test_qos_hysteresis_trip_and_clear():
     assert mon.clear_log == [(5.0, 0)]
 
 
+def test_qos_evidence_floor_alternation_freezes_not_resets():
+    """Satellite (ISSUE 7): a window under the evidence floor must neither
+    ADVANCE nor RESET the trip streak. Alternating bad / no-evidence
+    windows therefore still trips on the second bad window (the streak
+    survives the gap) -- but lowering the floor so the same thin window
+    is judged, with a CLEAN value, resets the streak and no trip ever
+    fires. The floor is load-bearing in both directions."""
+    bad = _qos(p99=200.0)
+    thin_clean = _qos(requests=5, p99=10.0)  # clean value, under the floor
+    script = [bad, thin_clean, bad]
+
+    # floor at 20: the thin window is a no-verdict -> freeze -> trip at t=2
+    mon = QoSMonitor(CellSLO(p99_ms=50.0, min_requests=20),
+                     QoSConfig(trip_after=2, clear_after=2))
+    mon.reset(1)
+    tel = _ScriptedTel({0: script})
+    verdicts = [mon.observe(tel, float(t))["tripped"] for t in range(3)]
+    assert verdicts == [[], [], [(0, "p99_ms")]]
+    assert mon._bad[0] == 2
+
+    # floor at 1: the same window is JUDGED clean -> streak resets -> the
+    # alternation can run forever without tripping
+    mon2 = QoSMonitor(CellSLO(p99_ms=50.0, min_requests=1),
+                      QoSConfig(trip_after=2, clear_after=2))
+    mon2.reset(1)
+    tel2 = _ScriptedTel({0: [bad, thin_clean] * 6})
+    for t in range(12):
+        assert not mon2.observe(tel2, float(t))["tripped"]
+    assert mon2._bad[0] <= 1
+
+
+def test_qos_alternating_evidence_freezes_clear_streak():
+    """The mirror image: a TRIPPED cell cannot clear through no-evidence
+    windows -- silence is not health. Good windows interleaved with thin
+    ones take strictly longer (in windows) to clear than consecutive
+    ones, because each thin window freezes the good streak."""
+    bad, good = _qos(p99=200.0), _qos()
+    thin = _qos(requests=0, gate_samples=0)
+    script = [bad, bad] + [good, thin] * 3
+    tel = _ScriptedTel({0: script})
+    mon = QoSMonitor(CellSLO(p99_ms=50.0),
+                     QoSConfig(trip_after=2, clear_after=3))
+    mon.reset(1)
+    cleared_at = None
+    for t in range(len(script)):
+        out = mon.observe(tel, float(t))
+        if out["cleared"]:
+            cleared_at = t
+    # trips at t=1; three GOOD windows land at t=2,4,6 -> clears at t=6,
+    # not t=4 (the thin windows at 3 and 5 bought no progress)
+    assert mon.trip_log == [(1.0, 0, "p99_ms")]
+    assert cleared_at == 6
+
+
+def test_qos_per_metric_evidence_floors_with_hysteresis():
+    """Gate-metric floors and completion floors gate INDEPENDENT verdicts:
+    a window thin on completions but rich in gate samples still advances a
+    reliability-trip streak, and vice versa."""
+    # plenty of gate evidence, almost no completions: reliability judged
+    gate_rich = _qos(requests=2, gate_samples=100, p99=999.0, short=0.5)
+    tel = _ScriptedTel({0: [gate_rich, gate_rich]})
+    mon = QoSMonitor(
+        CellSLO(p99_ms=50.0, reliability_shortfall=0.1,
+                min_requests=20, min_gate_samples=30),
+        QoSConfig(trip_after=2, clear_after=2),
+    )
+    mon.reset(1)
+    assert mon.observe(tel, 0.0)["tripped"] == []
+    assert mon.observe(tel, 1.0)["tripped"] == [(0, "reliability_shortfall")]
+    # the p99 number was far over cap both windows but never judged
+    assert mon.trip_log[0][2] == "reliability_shortfall"
+
+
+def test_qos_trip_evidence_payload():
+    """The observe() evidence dict carries what the audit log needs: the
+    windowed value, the cap it crossed, and the streak that tripped."""
+    bad = _qos(p99=200.0)
+    tel = _ScriptedTel({0: [bad, bad]})
+    mon = QoSMonitor(CellSLO(p99_ms=50.0), QoSConfig(trip_after=2))
+    mon.reset(1)
+    mon.observe(tel, 0.0)
+    out = mon.observe(tel, 1.0)
+    ev = out["evidence"][0]
+    assert ev["metric"] == "p99_ms" and ev["value"] == 200.0
+    assert ev["cap"] == 50.0 and ev["bad_streak"] == 2
+    assert ev["requests"] == 100
+    # tripped_mask is the distress signal the fleet controller consumes
+    mask = mon.tripped_mask()
+    assert mask.dtype == bool and mask[0]
+    mask[0] = False
+    assert mon.is_tripped(0)  # a copy: callers cannot reach in
+
+
 def test_qos_watched_subset():
     bad = _qos(p99=200.0)
     tel = _ScriptedTel({0: [bad], 1: [bad]})

@@ -207,6 +207,37 @@ def test_telemetry_windowed_estimates():
     assert tel.arrival_rate_estimate(1.0, now=10.0) == pytest.approx(4.0)
 
 
+def test_windowed_estimators_future_only_fallback():
+    """Regression (ISSUE 7 satellite): the stale-sample fallback must also
+    cover observations that all post-date `now` -- a congested cell's
+    in-flight transfers are priced at their FUTURE ready times, so a
+    controller tick early in the run can find nothing at or before now.
+    The documented contract is None only when nothing was ever observed."""
+    from repro.core.control import windowed_mean
+
+    # single future record, empty trailing window
+    assert windowed_mean([7.0], [3e6], 0.5, now=1.0) == pytest.approx(3e6)
+    # all future: the EARLIEST upcoming observation wins (nearest to now)
+    assert windowed_mean([5.0, 9.0], [4e6, 2e6], 1.0, now=1.0) == (
+        pytest.approx(4e6)
+    )
+    # mixed: the most recent PAST sample still beats any future one
+    assert windowed_mean([0.5, 9.0], [5e6, 2e6], 1.0, now=2.0) == (
+        pytest.approx(5e6)
+    )
+    # nothing ever observed stays None; queue contract keeps strict windows
+    assert windowed_mean([], [], 1.0, now=1.0) is None
+    assert windowed_mean([7.0], [3e6], 0.5, now=1.0,
+                         stale_fallback=False) is None
+
+    # the same guarantees through Telemetry's estimator surface
+    tel = Telemetry()
+    tel.observe_bandwidth(9.5, 4e6)  # future relative to now=1.0
+    assert tel.bandwidth_estimate(1.0, now=1.0) == pytest.approx(4e6)
+    # single-record window: that one sample IS the estimate
+    assert tel.bandwidth_estimate(1.0, now=9.6) == pytest.approx(4e6)
+
+
 # ------------------------------------------------------- plan re-scoring
 def test_rescore_plan_switches_under_bad_link(setup):
     """Under a starved uplink the small-payload, rarely-offloading deep
