@@ -318,9 +318,19 @@ class JaxGateBackend(GateBackend):
 
 
 # -------------------------------------------------------------- registry
+def _compiled_backend_factory() -> GateBackend:
+    # lazy: repro.fleet imports this module, so the compiled backend (which
+    # lives with the compiled fleet simulator) registers by name here and
+    # resolves on first use
+    from repro.fleet.compiled import CompiledGateBackend
+
+    return CompiledGateBackend()
+
+
 _GATE_BACKENDS: Dict[str, Callable[[], GateBackend]] = {
     "numpy": NumpyGateBackend,
     "jax": JaxGateBackend,
+    "compiled": _compiled_backend_factory,
 }
 _INSTANCES: Dict[str, GateBackend] = {}
 

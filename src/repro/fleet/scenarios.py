@@ -18,7 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
-from repro.core.gatepath import GateTable
+from repro.core.gatepath import GateTable, get_gate_backend
 from repro.fleet.controller import FleetController, FleetControllerConfig
 from repro.fleet.simulator import FleetConfig, FleetSimulator
 from repro.fleet.telemetry import FleetTelemetry
@@ -145,6 +145,11 @@ def run_fleet(
     config (e.g. cloud brownout intervals) and wins over `window_s`.
     `obs` attaches a `repro.obs.Observability` bundle (sampled traces,
     decision audit log, metrics); None (the default) is zero-perturbation.
+
+    backend="compiled" runs the whole window pipeline device-side as one
+    jitted program (`repro.fleet.compiled.CompiledFleetSimulator`,
+    parity-pinned against the host simulator); it serves static
+    deployments only, so it rejects `with_controller` and rollouts.
     """
     profile = profile or L.paper_2020()
     val = scenario.val
@@ -164,7 +169,12 @@ def run_fleet(
                 cloud_rho_max=0.9,
             ),
         )
-    sim = FleetSimulator(
+    sim_cls = FleetSimulator
+    if get_gate_backend(backend).name == "compiled":
+        from repro.fleet.compiled import CompiledFleetSimulator
+
+        sim_cls = CompiledFleetSimulator
+    sim = sim_cls(
         table, scenario.topology, profile,
         config=fleet_config or FleetConfig(window_s=window_s),
         controller=controller, orchestrator=orchestrator, obs=obs,

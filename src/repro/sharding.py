@@ -199,3 +199,22 @@ def batch_specs_tree(batch_shapes):
         return fit_spec([b] + [None] * (nd - 1), leaf.shape)
 
     return jax.tree_util.tree_map_with_path(f, batch_shapes)
+
+
+# ------------------------------------------------------------ fleet mesh
+def fleet_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D device mesh with axis ``"cells"`` for the compiled fleet
+    pipeline (`repro.fleet.compiled`): per-cell request lanes and queue
+    state shard over this axis via `shard_map`; gate/context/link tables
+    replicate. `n_devices` caps the mesh (useful for tests forcing a
+    specific shape); default is every visible device."""
+    import numpy as np
+
+    devs = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"asked for {n_devices} mesh devices, have {len(devs)}"
+            )
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), ("cells",))

@@ -482,21 +482,24 @@ def test_fleet_acceptance_controller_beats_uncal(drift_data):
 
 @pytest.mark.slow
 def test_fleet_backend_parity_full_scale(drift_data):
-    """The jitted JAX gate backend reproduces the numpy-backed reference
-    fleet at FULL scale (>=100k requests, 64 cells) -- the window sizes
-    BENCH_fleet.json benchmarks the backends at."""
+    """The jitted JAX gate backend AND the fully compiled window pipeline
+    reproduce the numpy-backed reference fleet at FULL scale (>=100k
+    requests, 64 cells) -- the window sizes BENCH_fleet.json benchmarks
+    the backends at. The tier-1 sized-down version lives in
+    test_gatepath.py; this one is nightly/slow-job scale."""
     from repro.fleet.scenarios import reference_fleet, run_fleet
 
     val, test, (uncal, global_plan, bank) = drift_data
     scn = reference_fleet(val=val, test=test)
     a = run_fleet(bank, scn).fleet_summary()
-    b = run_fleet(bank, scn, backend="jax").fleet_summary()
-    assert a["requests"] == b["requests"]
-    assert a["offload_rate"] == pytest.approx(b["offload_rate"], abs=1e-12)
-    assert a["p99_ms"] == pytest.approx(b["p99_ms"], rel=1e-9)
-    assert a["miscalibration_gap"] == pytest.approx(
-        b["miscalibration_gap"], abs=1e-9
-    )
+    for backend in ("jax", "compiled"):
+        b = run_fleet(bank, scn, backend=backend).fleet_summary()
+        assert a["requests"] == b["requests"]
+        assert a["offload_rate"] == pytest.approx(b["offload_rate"], abs=1e-12)
+        assert a["p99_ms"] == pytest.approx(b["p99_ms"], rel=1e-9)
+        assert a["miscalibration_gap"] == pytest.approx(
+            b["miscalibration_gap"], abs=1e-9
+        )
 
 
 def test_fleet_acceptance_small(drift_data):

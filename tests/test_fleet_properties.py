@@ -1,0 +1,217 @@
+"""Property-test harness for the max-plus FIFO solvers (ISSUE 8).
+
+The compiled fleet pipeline replaces the host per-request FIFO loop with
+`lax.associative_scan` over the max-plus semiring. Before that kernel is
+allowed to serve traffic, this suite pins it against the deliberately
+naive Python oracles in `repro.fleet.maxplus`:
+
+- `fifo_done_maxplus` vs `fifo_oracle` (single-server FIFO), and
+- `kserver_done_maxplus` vs `kserver_oracle` (shared cloud tier,
+  constant service so the residue-class decomposition is exact),
+
+across >= 200 generated examples plus explicit edge cases: empty
+windows, zero-service requests, arrival ties, and saturated queues.
+
+On dyadic-rational inputs (small integers scaled by a power of two)
+float addition is EXACT, so the tree-shaped scan and the sequential
+oracle must agree bit-for-bit; general float inputs are compared to a
+tight relative tolerance that only absorbs re-association round-off.
+
+The suite runs under `hypothesis` when available (the CI dev
+requirements install it) and falls back to an equivalent seeded
+numpy-RNG sweep otherwise, so the >=200-example guarantee holds in both
+environments.
+"""
+import numpy as np
+import pytest
+
+from repro.fleet.maxplus import (
+    fifo_done_maxplus,
+    fifo_oracle,
+    kserver_done_maxplus,
+    kserver_oracle,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without dev extras: seeded sweep below
+    HAVE_HYPOTHESIS = False
+
+N_EXAMPLES = 200
+RTOL = dict(rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------- helpers
+def dyadic_case(rng, n):
+    """Arrival/service columns whose float sums are exact.
+
+    Small non-negative integers scaled by 2^-6 keep every partial sum an
+    exact dyadic rational well inside float64, so scan vs oracle must be
+    bit-identical regardless of association order.
+    """
+    t = rng.integers(0, 512, n).astype(np.float64) * 2.0**-6
+    s = rng.integers(0, 64, n).astype(np.float64) * 2.0**-6
+    return t, s
+
+
+def float_case(rng, n):
+    t = rng.uniform(0.0, 30.0, n)
+    s = rng.uniform(0.0, 2.0, n)
+    return t, s
+
+
+def assert_fifo_matches(t, s, free=0.0, exact=False):
+    got = fifo_done_maxplus(t, s, free)
+    want = fifo_oracle(t, s, free)
+    if exact:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, **RTOL)
+
+
+# ------------------------------------------------- generated example sweep
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(
+        data=st.lists(
+            st.tuples(st.integers(0, 512), st.integers(0, 64)),
+            min_size=1,
+            max_size=128,
+        ),
+        free=st.integers(0, 256),
+    )
+    def test_fifo_scan_matches_oracle_exactly(data, free):
+        """Dyadic inputs: tree scan == sequential oracle, bit-for-bit."""
+        arr = np.asarray(data, dtype=np.float64) * 2.0**-6
+        assert_fifo_matches(arr[:, 0], arr[:, 1],
+                            free=float(free) * 2.0**-6, exact=True)
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), n=st.integers(1, 200))
+    def test_fifo_scan_matches_oracle_floats(seed, n):
+        """General float inputs: equal to re-association round-off."""
+        rng = np.random.default_rng(seed)
+        t, s = float_case(rng, n)
+        assert_fifo_matches(t, s, free=rng.uniform(0.0, 5.0))
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), n=st.integers(1, 150),
+           k=st.integers(1, 8))
+    def test_kserver_scan_matches_oracle(seed, n, k):
+        """Constant-service K-server: residue chains == earliest-free."""
+        rng = np.random.default_rng(seed)
+        t, _ = dyadic_case(rng, n)
+        t.sort()  # cloud jobs arrive in completion order
+        s = np.full(n, rng.integers(1, 64) * 2.0**-6)
+        got = kserver_done_maxplus(t, s, k)
+        want = kserver_oracle(t, s, k)
+        np.testing.assert_array_equal(got, want)
+
+else:
+
+    def test_fifo_scan_matches_oracle_exactly():
+        rng = np.random.default_rng(0)
+        for i in range(N_EXAMPLES):
+            n = int(rng.integers(1, 129))
+            t, s = dyadic_case(rng, n)
+            assert_fifo_matches(t, s, free=float(rng.integers(0, 256)) * 2.0**-6,
+                                exact=True)
+
+    def test_fifo_scan_matches_oracle_floats():
+        rng = np.random.default_rng(1)
+        for i in range(N_EXAMPLES):
+            n = int(rng.integers(1, 201))
+            t, s = float_case(rng, n)
+            assert_fifo_matches(t, s, free=rng.uniform(0.0, 5.0))
+
+    def test_kserver_scan_matches_oracle():
+        rng = np.random.default_rng(2)
+        for i in range(N_EXAMPLES):
+            n = int(rng.integers(1, 151))
+            k = int(rng.integers(1, 9))
+            t, _ = dyadic_case(rng, n)
+            t.sort()
+            s = np.full(n, rng.integers(1, 64) * 2.0**-6)
+            np.testing.assert_array_equal(
+                kserver_done_maxplus(t, s, k), kserver_oracle(t, s, k)
+            )
+
+
+# ----------------------------------------------------- explicit edge cases
+def test_empty_window():
+    out = fifo_done_maxplus(np.empty(0), np.empty(0))
+    assert out.shape == (0,) and out.dtype == np.float64
+
+
+def test_single_request():
+    np.testing.assert_array_equal(
+        fifo_done_maxplus(np.array([3.0]), np.array([0.5])), [3.5]
+    )
+    np.testing.assert_array_equal(  # busy server delays the lone arrival
+        fifo_done_maxplus(np.array([1.0]), np.array([0.5]), free_s=4.0), [4.5]
+    )
+
+
+def test_zero_service_requests():
+    """s == 0 jobs complete at max(arrival, predecessor-done) exactly."""
+    t = np.array([0.0, 1.0, 1.0, 2.0, 5.0])
+    s = np.zeros(5)
+    assert_fifo_matches(t, s, exact=True)
+    np.testing.assert_array_equal(fifo_done_maxplus(t, s), t)
+    # zero-service interleaved with real work
+    s2 = np.array([2.0, 0.0, 0.5, 0.0, 0.0])
+    assert_fifo_matches(t, s2, exact=True)
+
+
+def test_arrival_ties():
+    """Simultaneous arrivals queue in column order, deterministically."""
+    t = np.full(16, 2.5)
+    s = np.full(16, 0.25)
+    want = 2.5 + 0.25 * np.arange(1, 17)
+    np.testing.assert_array_equal(fifo_done_maxplus(t, s), want)
+    assert_fifo_matches(t, s, exact=True)
+
+
+def test_saturated_queue():
+    """All work arrives at t=0: done times are the pure service cumsum."""
+    rng = np.random.default_rng(7)
+    s = rng.integers(1, 32, 100).astype(np.float64) * 2.0**-4
+    t = np.zeros(100)
+    np.testing.assert_array_equal(fifo_done_maxplus(t, s), np.cumsum(s))
+    assert_fifo_matches(t, s, exact=True)
+
+
+def test_unsorted_arrivals():
+    """The max-plus form never assumes sorted t; the oracle is the spec."""
+    rng = np.random.default_rng(11)
+    t, s = dyadic_case(rng, 64)
+    rng.shuffle(t)
+    assert_fifo_matches(t, s, exact=True)
+
+
+def test_busy_server_free_time():
+    t = np.array([0.0, 0.5, 4.0])
+    s = np.array([1.0, 1.0, 1.0])
+    np.testing.assert_array_equal(
+        fifo_done_maxplus(t, s, free_s=10.0), [11.0, 12.0, 13.0]
+    )
+
+
+def test_kserver_edges():
+    # k >= n: every job gets its own server
+    t = np.array([0.0, 0.0, 1.0])
+    s = np.full(3, 2.0)
+    np.testing.assert_array_equal(kserver_done_maxplus(t, s, 5), [2.0, 2.0, 3.0])
+    # k == 1 degenerates to plain FIFO
+    rng = np.random.default_rng(13)
+    td, sd = dyadic_case(rng, 40)
+    td.sort()
+    sc = np.full(40, sd[0])
+    np.testing.assert_array_equal(
+        kserver_done_maxplus(td, sc, 1), fifo_done_maxplus(td, sc)
+    )
+    # empty
+    assert kserver_done_maxplus(np.empty(0), np.empty(0), 3).shape == (0,)

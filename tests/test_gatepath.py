@@ -52,9 +52,12 @@ def drift_small():
 
 # ------------------------------------------------------------- registry
 def test_backend_registry():
-    assert {"numpy", "jax"} <= set(available_gate_backends())
+    assert {"numpy", "jax", "compiled"} <= set(available_gate_backends())
     assert isinstance(get_gate_backend(None), NumpyGateBackend)
     assert isinstance(get_gate_backend("jax"), JaxGateBackend)
+    # the compiled fleet backend gates with the numpy tables (exact parity)
+    assert isinstance(get_gate_backend("compiled"), NumpyGateBackend)
+    assert get_gate_backend("compiled").name == "compiled"
     # instances pass through; repeated name lookups share the jit caches
     jx = get_gate_backend("jax")
     assert get_gate_backend(jx) is jx
@@ -205,20 +208,51 @@ def test_contextual_core_backend_parity(drift_small):
             assert gn[2] == pytest.approx(gj[2], rel=1e-5)
 
 
+# --------------------------------------------------------- retrace count
+def test_gate_window_cells_pow2_padding_retrace_count(cascade):
+    """`gate_window_cells` pads every window to the next power of two, so
+    sweeping window sizes 1..N may trigger at most log2(N)+1 distinct
+    compilations of the jitted cells kernel -- pinned by inspecting the
+    jit cache of a FRESH backend instance. A second sweep must be free."""
+    exits, final, y, plan = cascade
+    be = JaxGateBackend()  # private jit caches, no shared-instance noise
+    table = GateTable.from_logits(exits, final, plan, labels=y, backend=be)
+    rng = np.random.default_rng(5)
+    N, n_cells = 64, 3
+
+    def sweep():
+        for n in range(1, N + 1):
+            ctx = np.zeros(n, np.int64)
+            smp = rng.integers(0, table.n_samples, n)
+            cells = rng.integers(0, n_cells, n)
+            table.gate_window_cells(ctx, smp, cells, [1] * n_cells,
+                                    [0.8] * n_cells, n_cells)
+
+    sweep()
+    fn = be._cells_fn()
+    n_compiles = fn._cache_size()
+    assert 1 <= n_compiles <= int(np.log2(N)) + 1, n_compiles
+    sweep()  # every padded shape is now cached: zero fresh traces
+    assert fn._cache_size() == n_compiles
+
+
 # ------------------------------------------------------- simulator level
 def test_fleet_simulator_backend_parity(drift_small):
-    """End to end: the same small fleet simulated over a numpy-backed and
-    a jax-backed table produces the same telemetry."""
+    """End to end: the same ~2k-request fleet simulated over the numpy,
+    jax, and compiled backends produces the same telemetry -- the tier-1
+    sized-down version of the full-scale @slow parity in test_fleet.py,
+    so every CI run exercises the compiled gate path."""
     from repro.fleet.scenarios import reference_fleet, run_fleet
 
     val, test, (uncal, global_plan, bank) = drift_small
-    scn = reference_fleet(n_cells=4, requests_per_cell=150,
+    scn = reference_fleet(n_cells=4, requests_per_cell=500,
                           val=val, test=test)
     a = run_fleet(bank, scn).fleet_summary()
-    b = run_fleet(bank, scn, backend="jax").fleet_summary()
-    assert a["requests"] == b["requests"]
-    assert a["offload_rate"] == pytest.approx(b["offload_rate"], abs=1e-12)
-    assert a["p99_ms"] == pytest.approx(b["p99_ms"], rel=1e-9)
-    assert a["miscalibration_gap"] == pytest.approx(
-        b["miscalibration_gap"], abs=1e-9
-    )
+    for backend in ("jax", "compiled"):
+        b = run_fleet(bank, scn, backend=backend).fleet_summary()
+        assert a["requests"] == b["requests"]
+        assert a["offload_rate"] == pytest.approx(b["offload_rate"], abs=1e-12)
+        assert a["p99_ms"] == pytest.approx(b["p99_ms"], rel=1e-9)
+        assert a["miscalibration_gap"] == pytest.approx(
+            b["miscalibration_gap"], abs=1e-9
+        )

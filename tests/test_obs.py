@@ -306,6 +306,96 @@ def test_whole_fleet_outage_backhaul_traced(drift_data):
                for s in obs.audit.filter(action="shed_route"))
 
 
+# ------------------------------------------------ compiled-backend parity
+def _assert_trace_records_match(recs_a, recs_b):
+    """Same sample, same story: non-float fields bit-identical, float
+    fields equal to round-off (compiled tree-scan vs host sequential)."""
+    assert len(recs_a) == len(recs_b)
+
+    def check(a, b, path):
+        if isinstance(a, dict):
+            assert isinstance(b, dict) and set(a) == set(b), path
+            for k in a:
+                check(a[k], b[k], f"{path}.{k}")
+        elif isinstance(a, (list, tuple)):
+            assert len(a) == len(b), path
+            for i, (x, y) in enumerate(zip(a, b)):
+                check(x, y, f"{path}[{i}]")
+        elif isinstance(a, float) and not isinstance(a, bool):
+            assert b == pytest.approx(a, rel=1e-9, abs=1e-12), path
+        else:
+            assert a == b, path
+
+    for ra, rb in zip(recs_a, recs_b):
+        assert ra["req_id"] == rb["req_id"]
+        check(ra, rb, f"req {ra['req_id']}")
+
+
+def _run_both_backends(drift_data, orchestrator=None, every=7):
+    scn = small_fleet(drift_data)
+    out = []
+    for backend in (None, "compiled"):
+        obs = full_observability(trace_sample_every=every)
+        orch = orchestrator() if orchestrator else None
+        run_fleet(drift_data[2][2], scn, backend=backend,
+                  orchestrator=orch, obs=obs)
+        out.append(obs)
+    return out
+
+
+def test_compiled_trace_passes_checks_identically(drift_data):
+    """A compiled-backend fleet run's sampled trace passes the
+    `repro.obs.check` invariants and matches the numpy backend's trace
+    record for record (same req_ids, same verdicts, floats to
+    round-off); the integer metrics counters agree exactly."""
+    a, b = _run_both_backends(drift_data, every=7)
+    assert run_checks(a.trace.records, a.metrics, a.audit.records) == []
+    assert run_checks(b.trace.records, b.metrics, b.audit.records) == []
+    _assert_trace_records_match(a.trace.records, b.trace.records)
+    for name in ("fleet_requests_total", "fleet_offloaded_total"):
+        assert b.metrics.counter_total(name) == a.metrics.counter_total(name)
+    assert (b.metrics.gauge_value("fleet_requests_completed")
+            == a.metrics.gauge_value("fleet_requests_completed"))
+
+
+def test_compiled_churn_trace_parity_and_conservation(drift_data):
+    """Churn on the compiled path: requests conserved across shed routing,
+    audit shows identical routing decisions, every-request trace matches
+    the host backend's."""
+    def orch():
+        return Orchestrator(churn=ChurnSchedule.outage(
+            [0, 2], start_s=2.0, duration_s=4.0))
+
+    a, b = _run_both_backends(drift_data, orchestrator=orch, every=1)
+    assert run_checks(a.trace.records, a.metrics, a.audit.records) == []
+    assert run_checks(b.trace.records, b.metrics, b.audit.records) == []
+    _assert_trace_records_match(a.trace.records, b.trace.records)
+    sheds_a = a.audit.filter(action="shed_route")
+    sheds_b = b.audit.filter(action="shed_route")
+    assert [s["evidence"] for s in sheds_a] == [
+        s["evidence"] for s in sheds_b]
+    assert (b.metrics.counter_total("fleet_shed_total")
+            == a.metrics.counter_total("fleet_shed_total"))
+
+
+def test_compiled_backhaul_trace_parity(drift_data):
+    """Whole-fleet outage on the compiled path: gate=None backhaul
+    records telescope and match the host trace bit-for-bit on non-float
+    fields."""
+    scn = small_fleet(drift_data)
+    n_cells = scn.topology.n_cells
+
+    def orch():
+        return Orchestrator(churn=ChurnSchedule.outage(
+            list(range(n_cells)), start_s=2.0, duration_s=3.0))
+
+    a, b = _run_both_backends(drift_data, orchestrator=orch, every=1)
+    assert run_checks(b.trace.records, b.metrics, b.audit.records) == []
+    _assert_trace_records_match(a.trace.records, b.trace.records)
+    backhauled = [r for r in b.trace.records if r["gate"] is None]
+    assert backhauled and all(not r["on_device"] for r in backhauled)
+
+
 # ----------------------------------------- QoS distress -> fleet controller
 def test_qos_trip_drives_controller_concession(drift_data):
     """The ROADMAP satellite: the monitor's trip verdict IS the fleet
