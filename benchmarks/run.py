@@ -136,16 +136,42 @@ def bench_serving_runtime(n_requests=2000, out_path="BENCH_serving.json"):
                      TemperatureScaling.from_temperature(1.0)],
     )
 
-    def scenario(with_controller):
+    def scenario(with_controller, obs=None):
         t0 = time.perf_counter()
         tel = run_congested_markov(
             plan, exits, final, y,
-            n_requests=n_requests, with_controller=with_controller,
+            n_requests=n_requests, with_controller=with_controller, obs=obs,
         )
         return tel.summary(), time.perf_counter() - t0
 
     static, wall_s = scenario(False)
     ctrl, wall_c = scenario(True)
+
+    # instrumentation-overhead arm: the same static scenario with the
+    # FULL observability bundle (trace + audit + metrics + calibration
+    # sketch) attached, median-of-3 both ways against the obs-off run.
+    # Two claims ride in the artifact and CI asserts both: the obs-on
+    # summaries are BIT-IDENTICAL to obs-off (zero perturbation), and
+    # the wall-clock ratio stays under a documented (generous -- shared
+    # CI runners are noisy) bound.
+    from repro.obs import full_observability
+
+    off_walls, on_walls = [], []
+    obs_summary = None
+    for _ in range(3):
+        _, w = scenario(False)
+        off_walls.append(w)
+        obs_summary, w = scenario(False, obs=full_observability())
+        on_walls.append(w)
+    off_med = sorted(off_walls)[1]
+    on_med = sorted(on_walls)[1]
+    obs_overhead = {
+        "off_wall_s": off_med,
+        "on_wall_s": on_med,
+        "ratio": on_med / off_med,
+        "bound": 3.0,  # CI assertion; documented in docs/observability.md
+        "bit_exact": obs_summary == static,
+    }
     # metadata derived from the scenario module itself, never duplicated
     import inspect
 
@@ -166,6 +192,7 @@ def bench_serving_runtime(n_requests=2000, out_path="BENCH_serving.json"):
         },
         "static": static,
         "controller": ctrl,
+        "obs_overhead": obs_overhead,
         "p99_improvement": 1.0 - ctrl["p99_ms"] / static["p99_ms"],
         "miss_rate_improvement": static["deadline_miss_rate"]
         - ctrl["deadline_miss_rate"],
@@ -177,6 +204,7 @@ def bench_serving_runtime(n_requests=2000, out_path="BENCH_serving.json"):
         f"sim_rps={2 * n_requests / (wall_s + wall_c):.0f};"
         f"p99_static_ms={static['p99_ms']:.1f};"
         f"p99_ctrl_ms={ctrl['p99_ms']:.1f};"
+        f"obs_overhead={obs_overhead['ratio']:.2f}x;"
         f"artifact={out_path}"
     )
 
@@ -528,14 +556,27 @@ def bench_emit_obs(out_prefix="OBS"):
       {prefix}_serving_metrics.json  metrics registry (JSON export)
       {prefix}_serving_metrics.prom  same registry, Prometheus text
       {prefix}_serving_audit.jsonl   online-controller decision audit
+      {prefix}_serving_calibration.json  reliability sketch of the run
       {prefix}_fleet_trace.jsonl     sampled trace of the >=100k fleet run
       {prefix}_fleet_metrics.json/.prom
+      {prefix}_fleet_calibration.json
       {prefix}_fleet_audit.jsonl     guarded poisoned-canary rollout audit
-                                     (holds the full trip->rollback chain)
+                                     (holds the full trip->rollback chain,
+                                     tripped by the CALIBRATION SLO)
+      {prefix}_drift_calibration.json  sketch of a poisoned deployment
+      {prefix}_bank.json             the poisoned candidate bank (its
+                                     metadata still carries the honest
+                                     fit-time val ECE, which is exactly
+                                     what the drift report diffs against)
 
     Every artifact is cross-examined in-process with `repro.obs.check`
     before returning (CI re-runs the CLI against the files); a violated
-    invariant fails the bench."""
+    invariant fails the bench. The canary arm additionally asserts the
+    EARLY-WARNING claim: the under-confident poison offloads its
+    traffic, so the reliability-gap SLO (on-device label outcomes only)
+    never reaches its evidence floor -- the windowed calibration gauges
+    are the only stream that trips, and they must trip before any
+    gap-family verdict."""
     from repro.core.calibration import TemperatureScaling
     from repro.core.policy import OffloadPlan
     from repro.fleet.scenarios import reference_fleet, run_fleet
@@ -544,8 +585,13 @@ def bench_emit_obs(out_prefix="OBS"):
         JsonlTraceSink,
         MetricsRegistry,
         Observability,
+        ReliabilitySketch,
     )
-    from repro.obs.check import run_checks, verify_rollback_chain
+    from repro.obs.check import (
+        check_calibration,
+        run_checks,
+        verify_rollback_chain,
+    )
     from repro.obs.trace import read_jsonl
     from repro.serving.scenarios import (
         fit_drift_plans,
@@ -566,7 +612,7 @@ def bench_emit_obs(out_prefix="OBS"):
     audit_s, metrics_s = AuditLog(), MetricsRegistry()
     obs_s = Observability(
         trace=JsonlTraceSink(f"{out_prefix}_serving_trace.jsonl"),
-        audit=audit_s, metrics=metrics_s,
+        audit=audit_s, metrics=metrics_s, calibration=ReliabilitySketch(),
     )
     run_congested_markov(plan, exits, final, y, n_requests=2000,
                          with_controller=True, obs=obs_s)
@@ -574,9 +620,10 @@ def bench_emit_obs(out_prefix="OBS"):
     metrics_s.write_json(f"{out_prefix}_serving_metrics.json")
     metrics_s.write_prometheus(f"{out_prefix}_serving_metrics.prom")
     audit_s.to_jsonl(f"{out_prefix}_serving_audit.jsonl")
+    obs_s.calibration.save(f"{out_prefix}_serving_calibration.json")
     errors = run_checks(
         read_jsonl(f"{out_prefix}_serving_trace.jsonl"),
-        metrics_s, audit_s.records,
+        metrics_s, audit_s.records, calibration=obs_s.calibration,
     )
 
     # fleet: the full reference fleet (>=100k requests), sampled trace
@@ -590,29 +637,74 @@ def bench_emit_obs(out_prefix="OBS"):
     obs_f = Observability(
         trace=JsonlTraceSink(f"{out_prefix}_fleet_trace.jsonl"),
         metrics=metrics_f, trace_sample_every=sample_every,
+        calibration=ReliabilitySketch(),
     )
     run_fleet(bank, scn, with_controller=True, obs=obs_f)
     obs_f.close()
     metrics_f.write_json(f"{out_prefix}_fleet_metrics.json")
     metrics_f.write_prometheus(f"{out_prefix}_fleet_metrics.prom")
+    obs_f.calibration.save(f"{out_prefix}_fleet_calibration.json")
     errors += run_checks(
         read_jsonl(f"{out_prefix}_fleet_trace.jsonl"), metrics_f,
+        calibration=obs_f.calibration,
     )
 
-    # fleet audit: a guarded poisoned-canary rollout, so the artifact CI
-    # cross-examines holds a complete trip -> rollback causal chain
+    # fleet audit: a guarded poisoned-canary rollout whose SLO watches
+    # the streaming calibration gauges, so the artifact CI cross-examines
+    # holds a complete CALIBRATION trip -> rollback causal chain. The
+    # poison is UNDER-confidence (T x20): the canary offloads nearly
+    # everything, the gap-family SLOs starve below their gate-sample
+    # evidence floor, and only the calibration stream (which covers
+    # offloaded requests too) can see the failure.
+    from repro.orchestration.qos import CellSLO
     from repro.orchestration.scenarios import _rollout_pieces, poisoned_bank
 
     scn_small = reference_fleet(n_cells=8, requests_per_cell=300,
                                 cloud_servers=2, val=val, test=test)
-    orch, _, _ = _rollout_pieces(scn_small, poisoned_bank(bank))
-    audit_f = AuditLog()
+    # ece_cap sits between the incumbent's windowed per-cell ECE (~0.21
+    # on these small windows) and the poisoned canary's (~0.45): the
+    # incumbent never trips, the canary always does.
+    cal_slo = CellSLO(reliability_shortfall=0.12, ece_cap=0.30,
+                      min_requests=12, min_gate_samples=25)
+    orch, monitor, _ = _rollout_pieces(
+        scn_small, poisoned_bank(bank, temp_scale=20.0), slo=cal_slo)
+    audit_f, metrics_a = AuditLog(), MetricsRegistry()
+    cal_a = ReliabilitySketch()
     run_fleet(bank, scn_small, orchestrator=orch,
-              obs=Observability(audit=audit_f))
+              obs=Observability(audit=audit_f, metrics=metrics_a,
+                                calibration=cal_a))
     audit_f.to_jsonl(f"{out_prefix}_fleet_audit.jsonl")
+    cal_a.save(f"{out_prefix}_fleet_audit_calibration.json")
+    errors += check_calibration(cal_a, metrics=metrics_a)
     chain = verify_rollback_chain(audit_f.records)
     if not chain["ok"]:
         errors.append(f"rollback chain broken: {chain['why']}")
+    trips = audit_f.filter(actor="qos_monitor", action="qos_trip")
+    ece_trips = [r for r in trips if r["evidence"]["metric"] == "ece"]
+    gap_trips = [r for r in trips if r["evidence"]["metric"]
+                 in ("reliability_gap", "reliability_shortfall")]
+    if not ece_trips:
+        errors.append("calibration SLO never tripped on the poisoned canary")
+    elif gap_trips and min(r["t_s"] for r in gap_trips) <= min(
+            r["t_s"] for r in ece_trips):
+        errors.append("gap-family SLO tripped before the calibration SLO")
+
+    # drift-report artifacts: a poisoned bank deployed STATICALLY, plus
+    # the bank file itself (whose metadata still carries the honest
+    # fit-time val ECE) -- `repro.obs.calibration_report` must flag it
+    from repro.obs.calibration_report import build_report
+
+    bad = poisoned_bank(bank)
+    cal_d = ReliabilitySketch()
+    run_fleet(bad, scn_small, obs=Observability(calibration=cal_d))
+    cal_d.save(f"{out_prefix}_drift_calibration.json")
+    bad.save(f"{out_prefix}_bank.json")
+    report = build_report(
+        cal_d,
+        bank_meta={**bad.metadata, "default_context": bad.default_context},
+    )
+    if not report["flagged"]:
+        errors.append("drift report did not flag the poisoned deployment")
     if errors:
         raise AssertionError(
             "obs invariants violated: " + "; ".join(errors[:5])

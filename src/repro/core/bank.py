@@ -378,12 +378,31 @@ def fit_bank(
             f"default context {default_context!r} not among fitted contexts "
             f"{sorted(exit_logits_by_context)}"
         )
+    from repro.core.exits import gate_statistics
+    from repro.core.metrics import ece as _ece
+
     plans = {}
+    fit_ece: Dict[str, Dict[str, float]] = {}
     for ctx in sorted(exit_logits_by_context):
         y = labels if labels_by_context is None else labels_by_context[ctx]
         plans[ctx] = make_plan(
             exit_logits_by_context[ctx], y, p_tar=p_tar, **make_plan_kwargs
         )
+        # fit-time calibration health, frozen into the artifact: the val
+        # ECE each expert shipped with, per branch. The deployed-side
+        # drift report (repro.obs.calibration_report) diffs the windowed
+        # serving ECE against these to flag regimes that drifted.
+        yv = np.asarray(y)
+        per_branch: Dict[str, float] = {}
+        for bi, z in enumerate(exit_logits_by_context[ctx]):
+            conf, pred, _ = gate_statistics(
+                plans[ctx].calibrated_logits(z, bi)
+            )
+            per_branch[str(bi + 1)] = float(
+                _ece(np.asarray(conf, np.float64),
+                     (np.asarray(pred) == yv).astype(np.float64))
+            )
+        fit_ece[ctx] = per_branch
     estimator = None
     if features_by_context is not None:
         missing = set(features_by_context) - set(plans)
@@ -400,9 +419,11 @@ def fit_bank(
         estimator = DistortionEstimator.fit(
             features_by_context, feature_names=names, **(estimator_kwargs or {})
         )
+    meta = dict(metadata or {})
+    meta.setdefault("fit_ece", fit_ece)
     return PlanBank(
         plans=plans,
         default_context=default_context,
         estimator=estimator,
-        metadata=metadata or {},
+        metadata=meta,
     )

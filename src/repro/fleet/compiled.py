@@ -285,7 +285,7 @@ class CompiledFleetSimulator(FleetSimulator):
         from repro.fleet.maxplus import maxplus_fifo
 
         (C, R, B, Rb, RB, D, K, N_pad, S_ctx, Kc, S_net, Kn,
-         slowdowns, ctx_knots, net_knots, mesh_axes) = S
+         slowdowns, ctx_knots, net_knots, mesh_axes, n_ctx, cal_bins) = S
         mesh = self._mesh_obj  # resolved by run(); part of the cache key
 
         def scale_at(t):
@@ -486,7 +486,7 @@ class CompiledFleetSimulator(FleetSimulator):
             done_sorted = jnp.maximum(b_s, a_s).reshape(-1)[:n]
             cloud = jnp.zeros(n).at[order2].set(done_sorted)
             nA = C * R
-            return dict(
+            res = dict(
                 edge_done=edge_done, ctx=ctx, conf=conf, on=on,
                 up_done=up_done, up_comm=up_comm,
                 s_eff=sA.reshape(C, R), cloud=cloud[:nA].reshape(C, R),
@@ -494,6 +494,36 @@ class CompiledFleetSimulator(FleetSimulator):
                 s_eff_bh=sB.reshape(C, RB),
                 cloud_bh=cloud[nA:].reshape(C, RB),
             )
+            if cal_bins:
+                # --- reliability-bin sketch, accumulated IN the fused
+                # program: the same float64 edges the host sketch bins
+                # with (passed in via tbl, not recomputed on device, so
+                # `searchsorted` assigns bit-identical bins), summed by
+                # (origin cell, context, bin) segment ids. Backhaul lanes
+                # carry no gate decision and are excluded -- the host
+                # counts them via `note_ungated`.
+                nb1 = cal_bins + 1
+                vf = lane["valid"].reshape(-1).astype(conf.dtype)
+                ctx_f = ctx.reshape(-1)
+                org_f = lane["org"].reshape(-1)
+                conf_f = conf.reshape(-1)
+                ec = tbl["ecorrect"][ctx_f, lane["smp"].reshape(-1)]
+                onf = on.reshape(-1).astype(conf.dtype)
+                bin_ = jnp.searchsorted(tbl["cal_edges"], conf_f,
+                                        side="left") - 1
+                bin_ = jnp.where(bin_ < 0, cal_bins, bin_)
+                seg = (org_f * n_ctx + ctx_f) * nb1 + bin_
+                rows = jnp.stack([
+                    vf, ec * vf, conf_f * vf, conf_f * conf_f * vf,
+                    conf_f * ec * vf, onf * vf, onf * ec * vf,
+                ])
+                calsum = jax.vmap(
+                    lambda r: jax.ops.segment_sum(
+                        r, seg, num_segments=C * n_ctx * nb1
+                    )
+                )(rows)
+                res["cal"] = calsum.reshape(7, C, n_ctx, nb1)
+            return res
 
         prog = jax.jit(program)
         self._programs[S] = prog
@@ -645,6 +675,17 @@ class CompiledFleetSimulator(FleetSimulator):
             comm_bh=np.float64(comm_bh), p_tar=np.float64(p_tar),
             **net_tbl, **ctx_tbl,
         )
+        cal_on = self._cal is not None and table.labels is not None
+        if cal_on:
+            from repro.obs.calibration import bin_edges
+
+            # host-computed float64 edges + per-(ctx, sample) EDGE
+            # correctness table, so the device program's binning and
+            # correctness match the host sketch bit-for-bit
+            tbl["cal_edges"] = bin_edges(self._cal.n_bins)
+            tbl["ecorrect"] = (
+                table.pred[:, bi, :] == table.labels[None, :]
+            ).astype(np.float64)
         self._tbl_struct = tbl
 
         K = topo.cloud_servers
@@ -657,6 +698,8 @@ class CompiledFleetSimulator(FleetSimulator):
             net_tbl["net_slots"].shape[1], net_tbl["net_knots"].shape[1],
             tuple(cfg.cloud_slowdowns), any_ctx_knots, any_net_knots,
             None if self._mesh_obj is None else tuple(self._mesh_obj.shape.items()),
+            int(table.conf.shape[0]),
+            0 if not cal_on else int(self._cal.n_bins),
         )
         prog = self._program(S)
 
@@ -678,6 +721,9 @@ class CompiledFleetSimulator(FleetSimulator):
                                   lane["smp"].ravel()).reshape(C, R)
         ce = table.correct(lane["smp"].ravel(), pred.ravel())
         cc = table.correct(lane["smp"].ravel(), cpredA.ravel())
+        # EDGE-branch correctness, kept separately from the cloud-patched
+        # column: the calibration stream audits the gate's own verdict
+        self._ecA = None if ce is None else ce.reshape(C, R).astype(np.int8)
         if ce is None:
             correctA = np.full((C, R), -1, np.int8)
         else:
@@ -775,6 +821,13 @@ class CompiledFleetSimulator(FleetSimulator):
                 "p_tar": np.full(n, p_tar),
                 "deadline": deadlines[b.origin],
             }
+            # cols["correct"] above is already cloud-patched; the live
+            # calibration stream and gate trace records need the gate's
+            # own verdict, so the edge column always rides along
+            cols["edge_correct"] = (
+                np.full(n, -1, np.int8) if self._ecA is None
+                else self._ecA[sl]
+            )
             if self._tracing:
                 cols["conf"] = out["conf"][sl]
                 cols["uplink_done"] = out["up_done"][sl]
@@ -783,6 +836,8 @@ class CompiledFleetSimulator(FleetSimulator):
                     cols["on_device"], np.nan, out["s_eff"][sl]
                 )
                 cols["serve_cell"] = b.serve
+            elif self._live is not None:
+                cols["conf"] = out["conf"][sl]
             return cols, out["up_comm"][sl], out["s_eff"][sl]
         sl = (b.origin, slice(b.row0, b.row0 + n))
         arr = bh["arr"][sl]
@@ -799,6 +854,7 @@ class CompiledFleetSimulator(FleetSimulator):
             "p_tar": np.full(n, p_tar),
             "deadline": deadlines[b.origin],
         }
+        cols["edge_correct"] = np.full(n, -1, np.int8)
         comm = np.full(n, float(self._tbl_struct["comm_bh"]))
         if self._tracing:
             cols["conf"] = np.full(n, np.nan)
@@ -806,6 +862,8 @@ class CompiledFleetSimulator(FleetSimulator):
             cols["uplink_start"] = out["bh_done"][sl] - comm
             cols["cloud_service"] = out["s_eff_bh"][sl]
             cols["serve_cell"] = -1
+        elif self._live is not None:
+            cols["conf"] = np.full(n, np.nan)
         return cols, comm, out["s_eff_bh"][sl]
 
     def _replay(self, tel, lane, bh, out, estA, correctA, completeA,
@@ -839,6 +897,11 @@ class CompiledFleetSimulator(FleetSimulator):
                     )
                 if b.shed:
                     self.shed_counts[b.origin] += n
+                    if b.serve < 0 and self._cal is not None:
+                        # backhauled without a gate decision: no
+                        # calibration signal, but the sketch totals must
+                        # still conserve fleet_requests_total
+                        self._cal.note_ungated(b.origin, n)
                     if self._metrics is not None:
                         self._metrics.inc(
                             "fleet_shed_total", n, cell=b.origin
@@ -892,6 +955,21 @@ class CompiledFleetSimulator(FleetSimulator):
                 if self._live is not None:
                     self._observe_edge_live(b.origin, cols, tel)
                 window_cols.append((b.origin, cols))
+        if self._cal is not None and "cal" in out:
+            self._ingest_cal(out["cal"], branch)
         self._flush(window_cols, tel)
         if self.obs is not None and self.obs.enabled:
             self._finish_obs(window_cols, tel)
+
+    def _ingest_cal(self, cal: np.ndarray, branch: int) -> None:
+        """Fold the device-binned `(7, C, n_ctx, n_bins+1)` reliability
+        blocks into the sketch. Zero-count (cell, context) blocks are
+        skipped so the sketch's key set matches the host simulator's
+        (which only creates keys for contexts it actually served)."""
+        keys = self.table.ctx_keys
+        for c in range(cal.shape[1]):
+            for k in range(cal.shape[2]):
+                blk = cal[:, c, k, :]
+                if blk[0].sum() <= 0:
+                    continue
+                self._cal.update_binned(c, keys[k], branch, blk)

@@ -212,6 +212,10 @@ class FleetSimulator:
         self._tracing = obs is not None and obs.trace is not None
         self._metrics = None if obs is None else obs.metrics
         self._audit = None if obs is None else obs.audit
+        # streaming reliability-bin sketch (repro.obs.calibration),
+        # accumulated columnarly per window at gate time, keyed by the
+        # ORIGIN cell / active context / deployed branch
+        self._cal = None if obs is None else getattr(obs, "calibration", None)
         if obs is not None and obs.audit is not None \
                 and controller is not None and hasattr(controller, "audit"):
             controller.audit = obs.audit
@@ -471,8 +475,21 @@ class FleetSimulator:
     def _observe_edge_live(self, c, cols, tel) -> None:
         """Edge-resolved live observations: on-device requests complete at
         edge_done, so their latency/deadline/gate outcomes are final the
-        moment the window is served."""
+        moment the window is served. The calibration stream takes EVERY
+        gated request (offloaded ones included -- the reliability
+        diagram judges the gate's confidence, not who answered), with
+        EDGE correctness, which at this point in the run is what
+        cols['correct'] holds (the cloud solve patches it later)."""
         on = cols["on_device"]
+        conf = cols.get("conf")
+        if conf is not None:
+            ec = cols.get("edge_correct", cols["correct"])
+            g = np.isfinite(conf) & (ec >= 0)
+            if g.any():
+                tel.observe_live_calibration(
+                    c, cols["edge_done"][g], conf[g], ec[g],
+                    on[g].astype(np.int8),
+                )
         if not on.any():
             return
         t = cols["edge_done"][on]
@@ -529,6 +546,14 @@ class FleetSimulator:
         conf, pred, on = table.gate_window(ctx_ids, samples, branch, p_tar)
         est = table.est_ids(ctx_ids, samples)
         correct = table.correct(samples, pred)
+        if self._cal is not None and correct is not None:
+            # columnar sketch update at gate time: EDGE correctness
+            # (before any cloud answer patches it), attributed to the
+            # origin cell's context regime
+            for cid in np.unique(ctx_ids):
+                m = ctx_ids == cid
+                self._cal.update(ctx_cell, table.ctx_keys[int(cid)], branch,
+                                 conf[m], correct[m], on[m])
         cols = {
             "arrival": arr,
             "samples": samples,
@@ -548,18 +573,25 @@ class FleetSimulator:
         }
         if self._tracing:
             self._add_trace_cols(cols, conf)
+        elif self._live is not None:
+            # the live calibration stream needs the gate confidences even
+            # without a trace sink (QoS windows ECE/coverage from them)
+            cols["conf"] = np.asarray(conf, np.float64)
         return cols
 
     def _add_trace_cols(self, cols, conf) -> None:
         """Extra per-request columns kept ONLY while a trace sink is
-        attached (never fed to telemetry): the gate confidence, plus the
-        uplink/cloud span timestamps `run` stamps after the FIFO solves.
-        conf=None marks a backhauled window where no gate ran."""
+        attached (never fed to telemetry): the gate confidence, the
+        EDGE correctness (cols['correct'] before the cloud solve patches
+        offloaded rows), plus the uplink/cloud span timestamps `run`
+        stamps after the FIFO solves. conf=None marks a backhauled
+        window where no gate ran."""
         n = len(cols["arrival"])
         cols["conf"] = (
             np.full(n, np.nan) if conf is None
             else np.asarray(conf, np.float64)
         )
+        cols["edge_correct"] = cols["correct"].copy()
         cols["uplink_start"] = np.full(n, np.nan)
         cols["uplink_done"] = np.full(n, np.nan)
         cols["cloud_service"] = np.full(n, np.nan)
@@ -599,6 +631,10 @@ class FleetSimulator:
             self._audit.record(
                 float(arr[0]), "simulator", "shed_route", cell=c,
                 host_cell=None, backhaul=True, requests=int(n))
+        if self._cal is not None:
+            # no gate ran: count the window so sketch totals still match
+            # the fleet_requests_total counter
+            self._cal.note_ungated(c, n)
         branch, p_tar = self._state[c]
         cols = {
             "arrival": arr,
@@ -693,6 +729,10 @@ class FleetSimulator:
                     source="fleet",
                 )
             fleet_metrics(tel, self._metrics)
+            if self._cal is not None:
+                from repro.obs import export_calibration
+
+                export_calibration(self._cal, self._metrics)
         if self._tracing:
             self._emit_traces(window_cols)
 
@@ -739,6 +779,7 @@ class FleetSimulator:
                 else:
                     ctx_id = int(cols["ctx_id"][i])
                     est_id = int(cols["est_id"][i])
+                    ec = int(cols["edge_correct"][i])
                     gate = {
                         "branch": branch,
                         "p_tar": float(cols["p_tar"][i]),
@@ -750,6 +791,9 @@ class FleetSimulator:
                             if bank_keys and 0 <= est_id < len(bank_keys)
                             else None
                         ),
+                        # EDGE correctness at gate time (-1 = unlabeled),
+                        # what the calibration sketch accumulated
+                        "correct": None if ec < 0 else ec,
                     }
                 sink.emit(request_record(
                     "fleet", counter + i, arrival, complete, on, spans,

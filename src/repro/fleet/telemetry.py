@@ -123,6 +123,15 @@ class FleetTelemetry:
         self._live_miss = [_Observations(np.int8) for _ in range(n_cells)]
         self._live_cor = [_Observations(np.int8) for _ in range(n_cells)]
         self._live_pt = [_Observations(np.float64) for _ in range(n_cells)]
+        # live calibration streams: (t, gate confidence) + lockstep
+        # (t, edge correctness) + (t, kept on-device) for EVERY gated
+        # request (offloaded ones included -- the reliability diagram is
+        # about the gate's confidence, not about who answered), fed at
+        # edge-completion time so the QoS monitor can window ECE /
+        # coverage mid-run
+        self._live_conf = [_Observations(np.float64) for _ in range(n_cells)]
+        self._live_ccor = [_Observations(np.int8) for _ in range(n_cells)]
+        self._live_con = [_Observations(np.int8) for _ in range(n_cells)]
         # arrivals a cell serves on BEHALF of dead neighbors (load shedding)
         # -- folded into its arrival-rate estimate so a utilization-aware
         # controller prices the host cell's true demand
@@ -169,6 +178,17 @@ class FleetTelemetry:
         self._live_cor[cell].append(times, correct)
         self._live_pt[cell].append(times, p_tar)
 
+    def observe_live_calibration(
+        self, cell: int, times: np.ndarray, conf: np.ndarray,
+        correct: np.ndarray, on: np.ndarray,
+    ) -> None:
+        """Gate confidences + EDGE correctness + on-device flags of every
+        gated request as its edge pass resolves -- the stream the
+        calibration SLOs (`ece_cap` / `coverage_floor`) window."""
+        self._live_conf[cell].append(times, conf)
+        self._live_ccor[cell].append(times, correct)
+        self._live_con[cell].append(times, on)
+
     def record_orchestration(self, t: float, kind: str, **payload) -> None:
         self.orchestration_events.append((float(t), str(kind), dict(payload)))
 
@@ -185,10 +205,13 @@ class FleetTelemetry:
         deadline-miss rate, on-device reliability gap, and how many
         completions the window holds. NaN where the window has no
         evidence for a metric (the monitor treats NaN as 'no verdict')."""
-        out = {"requests": 0, "gate_samples": 0, "p99_ms": float("nan"),
+        out = {"requests": 0, "gate_samples": 0, "cal_samples": 0,
+               "p99_ms": float("nan"),
                "deadline_miss_rate": float("nan"),
                "reliability_gap": float("nan"),
-               "reliability_shortfall": float("nan")}
+               "reliability_shortfall": float("nan"),
+               "ece": float("nan"), "coverage": float("nan"),
+               "cal_bins": None}
         if not self._live_lat[cell].empty:
             t, lat = self._live_lat[cell].arrays()
             m = (t > now - window_s) & (t <= now)
@@ -213,6 +236,26 @@ class FleetTelemetry:
                 out["reliability_shortfall"] = float(
                     max(0.0, pt[m].mean() - cor[m].mean())
                 )
+        if not self._live_conf[cell].empty:
+            t, conf = self._live_conf[cell].arrays()
+            _, ccor = self._live_ccor[cell].arrays()
+            _, con = self._live_con[cell].arrays()
+            m = (t > now - window_s) & (t <= now)
+            out["cal_samples"] = int(m.sum())
+            if m.any():
+                # the sketch's binning math, shared so the windowed gauge
+                # and the end-of-run sketch can never disagree
+                from repro.obs.calibration import (
+                    bin_block,
+                    block_coverage,
+                    block_ece,
+                    block_reliability,
+                )
+
+                blk = bin_block(conf[m], ccor[m], con[m])
+                out["ece"] = block_ece(blk)
+                out["coverage"] = block_coverage(blk)
+                out["cal_bins"] = block_reliability(blk)
         return out
 
     # --------------------------------------------------- controller window

@@ -22,7 +22,8 @@ from dataclasses import dataclass
 from typing import Optional
 
 from .audit import AuditLog
-from .export import fleet_metrics, serving_metrics
+from .calibration import ReliabilitySketch
+from .export import export_calibration, fleet_metrics, serving_metrics
 from .metrics import DEFAULT_BUCKETS_MS, MetricsRegistry
 from .trace import (
     SPAN_NAMES,
@@ -40,10 +41,12 @@ __all__ = [
     "JsonlTraceSink",
     "MetricsRegistry",
     "Observability",
+    "ReliabilitySketch",
     "RingBufferSink",
     "SPAN_NAMES",
     "TraceSink",
     "build_spans",
+    "export_calibration",
     "fleet_metrics",
     "full_observability",
     "read_jsonl",
@@ -62,12 +65,13 @@ class Observability:
     trace: Optional[TraceSink] = None
     audit: Optional[AuditLog] = None
     metrics: Optional[MetricsRegistry] = None
+    calibration: Optional[ReliabilitySketch] = None
     trace_sample_every: int = 1
 
     @property
     def enabled(self) -> bool:
         return (self.trace is not None or self.audit is not None
-                or self.metrics is not None)
+                or self.metrics is not None or self.calibration is not None)
 
     def close(self) -> None:
         if self.trace is not None:
@@ -79,4 +83,5 @@ def full_observability(trace_capacity: int = 200_000,
     """Everything on, in memory -- the one-liner for tests and notebooks."""
     return Observability(trace=RingBufferSink(trace_capacity),
                          audit=AuditLog(), metrics=MetricsRegistry(),
+                         calibration=ReliabilitySketch(),
                          trace_sample_every=trace_sample_every)

@@ -19,7 +19,12 @@ supposed to guarantee:
    completed).
 5. **Audit causality** (optional) -- a canary rollback is reconstructible
    from the audit log alone: canary start -> QoS trip on a canary cell
-   with over-cap evidence -> rollback restoring the incumbent version.
+   with over-cap (or, for floor SLOs like coverage, under-floor)
+   evidence -> rollback restoring the incumbent version.
+6. **Calibration sketch** (optional, ``--calibration``) -- the
+   reliability sketch's gated+ungated totals equal the request
+   counters, and on an unsampled trace the merged sketch reproduces
+   `repro.core.metrics.ece` from the raw gate confidences.
 
 Each check returns a list of human-readable error strings; the CLI
 prints a summary and exits non-zero if any check fails. CI runs this
@@ -177,6 +182,76 @@ def check_trace_counts(records: Sequence[Dict],
     return errors
 
 
+def check_calibration(sketch,
+                      metrics: Optional[MetricsRegistry] = None,
+                      trace_records: Optional[Sequence[Dict]] = None,
+                      ece_tol: float = 1e-9) -> List[str]:
+    """Calibration-sketch invariants.
+
+    1. **Totals conserved** -- gated + ungated sketch counts equal the
+       request counters the stacks maintain (`fleet_requests_total`
+       per cell, or `serving_requests_total` for the event runtime).
+    2. **ECE reproduction** -- on an UNSAMPLED trace, the merged
+       sketch's ECE equals `repro.core.metrics.ece` recomputed from the
+       raw per-request gate confidences/correctness in the trace
+       (counts must match exactly; the float sums differ only by
+       accumulation order, hence `ece_tol`).
+    """
+    errors: List[str] = []
+    if metrics is not None:
+        if metrics.counter_total("fleet_requests_total") > 0:
+            for cell in sketch.cells():
+                want = metrics.counter_total("fleet_requests_total",
+                                             cell=cell)
+                got = sketch.total_count(cell)
+                if want and got != want:
+                    errors.append(
+                        f"calibration: cell {cell} sketch total {got} != "
+                        f"fleet_requests_total {want:.0f}")
+        elif metrics.counter_total("serving_requests_total") > 0:
+            want = metrics.counter_total("serving_requests_total")
+            got = sketch.total_count()
+            if got != want:
+                errors.append(
+                    f"calibration: sketch total {got} != "
+                    f"serving_requests_total {want:.0f}")
+    if trace_records is not None:
+        unsampled = metrics is None or all(
+            metrics.gauge_value("trace_sample_every", source=s) in (None, 1)
+            for s in {r.get("source", "?") for r in trace_records
+                      if r.get("kind") == "request"}
+        )
+        if unsampled:
+            conf, correct = [], []
+            for r in trace_records:
+                if r.get("kind") != "request":
+                    continue
+                gate = r.get("gate")
+                if not gate or gate.get("confidence") is None \
+                        or gate.get("correct") is None:
+                    continue
+                conf.append(float(gate["confidence"]))
+                correct.append(int(gate["correct"]))
+            if conf:
+                import numpy as np
+
+                from repro.core.metrics import ece as _ece
+
+                want = float(_ece(np.asarray(conf),
+                                  np.asarray(correct, bool)))
+                got = sketch.ece()
+                n_trace, n_sketch = len(conf), sketch.gated_count()
+                if n_trace != n_sketch:
+                    errors.append(
+                        f"calibration: trace holds {n_trace} gated "
+                        f"records, sketch accumulated {n_sketch}")
+                elif abs(got - want) > ece_tol:
+                    errors.append(
+                        f"calibration: sketch ECE {got!r} != "
+                        f"core.metrics.ece {want!r} on the unsampled trace")
+    return errors
+
+
 def verify_rollback_chain(audit_records: Sequence[Dict]) -> Dict:
     """Reconstruct a canary rollback from the audit log alone.
 
@@ -208,9 +283,15 @@ def verify_rollback_chain(audit_records: Sequence[Dict]) -> Dict:
         if not ({"metric", "value", "cap"} <= set(ev)):
             out["why"] = f"trip at t={tr['t_s']} lacks metric/value/cap"
             return out
-        if not ev["value"] > ev["cap"]:
+        # direction-aware: floor SLOs (e.g. coverage) record op="<" and
+        # trip when the value drops BELOW the cap; caps default to ">"
+        op = ev.get("op", ">")
+        violated = ev["value"] < ev["cap"] if op == "<" \
+            else ev["value"] > ev["cap"]
+        if not violated:
             out["why"] = (f"trip at t={tr['t_s']}: value {ev['value']} not "
-                          f"over cap {ev['cap']}")
+                          f"{'under' if op == '<' else 'over'} cap "
+                          f"{ev['cap']}")
             return out
     rollbacks = [r for r in audit_records
                  if r["action"] == "rollout_rollback"
@@ -239,6 +320,7 @@ def run_checks(trace_records: Optional[Sequence[Dict]] = None,
                metrics: Optional[MetricsRegistry] = None,
                audit_records: Optional[Sequence[Dict]] = None,
                require_rollback_chain: bool = False,
+               calibration=None,
                rel_tol: float = 1e-6) -> List[str]:
     errors = []
     if trace_records is not None:
@@ -248,6 +330,9 @@ def run_checks(trace_records: Optional[Sequence[Dict]] = None,
             errors += check_trace_counts(trace_records, metrics)
     if metrics is not None:
         errors += check_conservation(metrics)
+    if calibration is not None:
+        errors += check_calibration(calibration, metrics=metrics,
+                                    trace_records=trace_records)
     if require_rollback_chain:
         if audit_records is None:
             errors.append("rollback chain required but no audit log given")
@@ -269,18 +354,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--require-rollback-chain", action="store_true",
                     help="fail unless the audit log reconstructs a full "
                          "canary rollback")
+    ap.add_argument("--calibration",
+                    help="reliability-sketch JSON artifact: verify totals "
+                         "against counters and ECE against the trace")
     ap.add_argument("--tol", type=float, default=1e-6,
                     help="relative float tolerance for span sums")
     args = ap.parse_args(argv)
-    if not (args.trace or args.metrics or args.audit):
-        ap.error("give at least one of --trace/--metrics/--audit")
+    if not (args.trace or args.metrics or args.audit or args.calibration):
+        ap.error("give at least one of "
+                 "--trace/--metrics/--audit/--calibration")
 
     traces = read_jsonl(args.trace) if args.trace else None
     metrics = MetricsRegistry.read_json(args.metrics) if args.metrics else None
     audit = read_jsonl(args.audit) if args.audit else None
+    sketch = None
+    if args.calibration:
+        from .calibration import ReliabilitySketch
+
+        sketch = ReliabilitySketch.load(args.calibration)
 
     errors = run_checks(traces, metrics, audit,
                         require_rollback_chain=args.require_rollback_chain,
+                        calibration=sketch,
                         rel_tol=args.tol)
     n_tr = 0 if traces is None else len(traces)
     print(f"repro.obs.check: {n_tr} trace records, "

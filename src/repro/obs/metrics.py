@@ -41,10 +41,47 @@ def _fmt(v: float) -> str:
     return str(int(f)) if f == int(f) and abs(f) < 1e15 else f"{f:.10g}"
 
 
+def _escape_label(v: str) -> str:
+    """Prometheus label-value escaping: backslash, double quote, newline."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _escape_help(v: str) -> str:
+    """Prometheus HELP-text escaping: backslash and newline only."""
+    return v.replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _label_str(key: _LabelKey) -> str:
     if not key:
         return ""
-    return "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
+    return "{" + ",".join(f'{k}="{_escape_label(v)}"' for k, v in key) + "}"
+
+
+#: Seed help texts for the metric families the serving stacks export.
+#: `MetricsRegistry.describe` registers/overrides entries per instance.
+_HELP_SEED = {
+    "serving_requests_total": "Requests completed by the event-driven "
+    "serving runtime.",
+    "serving_offloaded_total": "Requests the gate sent to the cloud.",
+    "serving_deadline_miss_total": "Requests finishing past their deadline.",
+    "serving_latency_ms": "End-to-end request latency (ms).",
+    "fleet_requests_total": "Requests completed per origin cell.",
+    "fleet_offloaded_total": "Fleet requests offloaded to the shared cloud.",
+    "fleet_latency_ms": "Fleet end-to-end request latency (ms).",
+    "trace_records_total": "Trace records emitted per source.",
+    "calibration_ece": "Windowed expected calibration error from the "
+    "reliability sketch.",
+    "calibration_coverage": "Fraction of on-device exits that were correct "
+    "(gate precision vs p_tar).",
+    "calibration_brier": "Brier score of gate confidence vs edge "
+    "correctness.",
+    "calibration_gated_total": "Gate decisions accumulated into the "
+    "reliability sketch.",
+    "calibration_ungated_total": "Requests served without a gate decision "
+    "(backhaul routing).",
+    "calibration_confidence": "Reliability-bin histogram of gate "
+    "confidences.",
+}
 
 
 class MetricsRegistry:
@@ -53,6 +90,14 @@ class MetricsRegistry:
         self._gauges: Dict[str, Dict[_LabelKey, float]] = {}
         self._hists: Dict[str, Dict[_LabelKey, Dict]] = {}
         self._buckets: Dict[str, Tuple[float, ...]] = {}
+        self._help: Dict[str, str] = dict(_HELP_SEED)
+
+    def describe(self, name: str, text: str) -> None:
+        """Attach/override the `# HELP` text emitted for `name`."""
+        self._help[name] = str(text)
+
+    def help_text(self, name: str, kind: str) -> str:
+        return self._help.get(name, f"{name} ({kind}).")
 
     # ------------------------------------------------------------- write
     def inc(self, name: str, value: float = 1.0, **labels) -> None:
@@ -84,6 +129,34 @@ class MetricsRegistry:
         h["counts"][bisect.bisect_left(bounds, float(value))] += 1
         h["sum"] += float(value)
         h["count"] += 1
+
+    def observe_counts(self, name: str, counts: Sequence[float],
+                       total_sum: float, **labels) -> None:
+        """Bulk-accumulate a pre-binned histogram: `counts[i]` lands in
+        slot i of the declared bounds (last slot = +Inf), `total_sum`
+        adds to the running sum. The entry point for sketch-derived
+        histograms where per-sample `observe` calls would be wasteful."""
+        bounds = self._buckets.setdefault(name, tuple(DEFAULT_BUCKETS_MS))
+        if len(counts) != len(bounds) + 1:
+            raise ValueError(
+                f"histogram {name!r}: {len(counts)} counts for "
+                f"{len(bounds)} bounds (+Inf slot required)"
+            )
+        series = self._hists.setdefault(name, {})
+        k = _key(labels)
+        h = series.get(k)
+        if h is None:
+            h = series[k] = {"counts": [0] * (len(bounds) + 1),
+                             "sum": 0.0, "count": 0}
+        n = 0
+        for i, c in enumerate(counts):
+            c = int(c)
+            if c < 0:
+                raise ValueError(f"histogram {name!r}: negative bulk count")
+            h["counts"][i] += c
+            n += c
+        h["sum"] += float(total_sum)
+        h["count"] += n
 
     # -------------------------------------------------------------- read
     def counter_total(self, name: str, **labels) -> float:
@@ -151,14 +224,17 @@ class MetricsRegistry:
         """Prometheus text exposition format (version 0.0.4)."""
         lines: List[str] = []
         for name, vals in sorted(self._counters.items()):
+            lines.append(f"# HELP {name} {_escape_help(self.help_text(name, 'counter'))}")
             lines.append(f"# TYPE {name} counter")
             for k, v in sorted(vals.items()):
                 lines.append(f"{name}{_label_str(k)} {_fmt(v)}")
         for name, vals in sorted(self._gauges.items()):
+            lines.append(f"# HELP {name} {_escape_help(self.help_text(name, 'gauge'))}")
             lines.append(f"# TYPE {name} gauge")
             for k, v in sorted(vals.items()):
                 lines.append(f"{name}{_label_str(k)} {_fmt(v)}")
         for name, vals in sorted(self._hists.items()):
+            lines.append(f"# HELP {name} {_escape_help(self.help_text(name, 'histogram'))}")
             lines.append(f"# TYPE {name} histogram")
             bounds = self._buckets[name]
             for k, h in sorted(vals.items()):

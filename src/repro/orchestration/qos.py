@@ -9,7 +9,13 @@ solve) -- and compares three tails against a `CellSLO`:
 * ``deadline_miss_rate`` -- share of completed requests past deadline;
 * ``reliability_gap``    -- |on-device accuracy - mean p_tar|, the
                             paper's calibration contract, auditable at
-                            the edge without the cloud.
+                            the edge without the cloud;
+* ``ece`` / ``coverage`` -- streaming calibration health (windowed
+                            expected calibration error and on-device
+                            precision) from the live reliability-bin
+                            stream; ``ece_cap`` is a cap, while
+                            ``coverage_floor`` trips when precision
+                            drops BELOW the floor.
 
 Hysteresis both ways: a cell TRIPS only after `trip_after` consecutive
 violating windows and, once tripped, CLEARS only after `clear_after`
@@ -31,10 +37,24 @@ QOS_METRICS = (
     "deadline_miss_rate",
     "reliability_gap",
     "reliability_shortfall",
+    "ece",
+    "coverage",
 )
 #: Metrics whose evidence is GATE samples (on-device label outcomes), not
 #: completions -- judged against ``min_gate_samples`` instead.
 _GATE_METRICS = ("reliability_gap", "reliability_shortfall")
+#: Calibration metrics: evidence is the live calibration stream (every
+#: gated request, offloaded ones included) -- judged against
+#: ``min_gate_samples`` on the ``cal_samples`` count.
+_CAL_METRICS = ("ece", "coverage")
+#: Metrics where LOWER values violate the SLO (the cap is a floor).
+_LOWER_IS_BAD = frozenset({"coverage"})
+#: SLO field name per metric where they differ (the cap/floor naming).
+_SLO_FIELD = {"ece": "ece_cap", "coverage": "coverage_floor"}
+
+
+def _slo_threshold(slo: "CellSLO", metric: str) -> Optional[float]:
+    return getattr(slo, _SLO_FIELD.get(metric, metric))
 
 
 @dataclass(frozen=True)
@@ -53,11 +73,17 @@ class CellSLO:
     deadline_miss_rate: Optional[float] = None
     reliability_gap: Optional[float] = None
     reliability_shortfall: Optional[float] = None
+    #: calibration-health SLOs (streaming reliability-sketch gauges):
+    #: ``ece_cap`` caps the windowed expected calibration error;
+    #: ``coverage_floor`` is a FLOOR -- the on-device precision (share of
+    #: kept answers that were correct) dropping BELOW it trips.
+    ece_cap: Optional[float] = None
+    coverage_floor: Optional[float] = None
     min_requests: int = 20  # fewer resolved completions -> no verdict
     min_gate_samples: Optional[int] = None  # default: min_requests
 
     def __post_init__(self):
-        if all(getattr(self, m) is None for m in QOS_METRICS):
+        if all(_slo_threshold(self, m) is None for m in QOS_METRICS):
             raise ValueError("an SLO must watch at least one metric")
         if self.min_requests < 1:
             raise ValueError("min_requests must be >= 1")
@@ -129,17 +155,23 @@ class QoSMonitor:
         )
         judged = False
         for metric in QOS_METRICS:
-            cap = getattr(slo, metric)
+            cap = _slo_threshold(slo, metric)
             if cap is None:
                 continue
             if metric in _GATE_METRICS:
                 if qos.get("gate_samples", 0) < min_gate:
                     continue
+            elif metric in _CAL_METRICS:
+                if qos.get("cal_samples", 0) < min_gate:
+                    continue
             elif qos["requests"] < slo.min_requests:
                 continue
             judged = True
             v = qos[metric]
-            if np.isfinite(v) and v > cap:
+            if not np.isfinite(v):
+                continue
+            bad = v < cap if metric in _LOWER_IS_BAD else v > cap
+            if bad:
                 return metric
         return "" if judged else None
 
@@ -168,14 +200,26 @@ class QoSMonitor:
                     self._tripped[c] = True
                     tripped.append((c, verdict))
                     self.trip_log.append((now, c, verdict))
-                    evidence[c] = {
+                    ev = {
                         "metric": verdict,
                         "value": float(qos[verdict]),
-                        "cap": float(getattr(self.slo, verdict)),
+                        "cap": float(_slo_threshold(self.slo, verdict)),
+                        "op": "<" if verdict in _LOWER_IS_BAD else ">",
                         "bad_streak": int(self._bad[c]),
                         "requests": int(qos["requests"]),
                         "gate_samples": int(qos["gate_samples"]),
                     }
+                    if verdict in _CAL_METRICS:
+                        ev["cal_samples"] = int(qos.get("cal_samples", 0))
+                        bins = qos.get("cal_bins") or []
+                        # the offending bins: largest count-weighted
+                        # conf-vs-acc residuals, the reliability-diagram
+                        # evidence an operator reconstructs the trip from
+                        ev["bins"] = sorted(
+                            bins,
+                            key=lambda b: -b["count"] * abs(b["residual"]),
+                        )[:3]
+                    evidence[c] = ev
             else:
                 self._good[c] += 1
                 self._bad[c] = 0

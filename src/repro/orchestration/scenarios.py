@@ -320,16 +320,21 @@ def cloud_brownout(quick: bool = False, seed: int = 0) -> dict:
 
 
 def _rollout_pieces(scn: FleetScenario, candidate: PlanBank,
-                    incumbent_version: int = 0):
+                    incumbent_version: int = 0,
+                    slo: Optional[CellSLO] = None):
     """The shared canary wiring: watch the reliability SHORTFALL per cell
     (accuracy below the promised p_tar; over-delivery never trips) with
     hysteresis, canary on two cells, promote after 8 clear windows. The
     gate-sample floor is what separates the honest bank (offloads its
     hard traffic, few on-device outcomes per window) from the poisoned
-    one (overconfident, keeps everything, floods the audit stream)."""
+    one (overconfident, keeps everything, floods the audit stream).
+    `slo` overrides the default shortfall SLO (e.g. to add the
+    calibration-health caps, `CellSLO.ece_cap`/`coverage_floor`)."""
     monitor = QoSMonitor(
-        CellSLO(reliability_shortfall=0.12, min_requests=12,
-                min_gate_samples=25),
+        slo if slo is not None else CellSLO(
+            reliability_shortfall=0.12, min_requests=12,
+            min_gate_samples=25,
+        ),
         QoSConfig(window_s=3.0, trip_after=2, clear_after=4),
     )
     rollout = RolloutManager(

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.exits import gate_statistics
 from repro.core.policy import OffloadPlan
+from repro.obs.calibration import GLOBAL_CONTEXT as _GLOBAL_CONTEXT
 from repro.offload import latency as L
 from repro.serving.network import NetworkModel, network_for
 from repro.serving.telemetry import RequestRecord, Telemetry
@@ -179,6 +180,9 @@ class _Pending:
     payload_nbytes: int
     context: Optional[str] = None  # true distortion context at gate time
     est_context: Optional[str] = None  # what the edge-side estimator said
+    # EDGE prediction's correctness captured at gate time (before the
+    # cloud answer overrides it); stamped only while obs is attached
+    edge_correct: Optional[bool] = None
     # span timestamps, stamped only while a trace sink is attached
     uplink_start_s: float = 0.0
     uplink_done_s: float = 0.0
@@ -228,6 +232,7 @@ class ServingRuntime:
         self.obs = obs
         self._trace = None if obs is None else obs.trace
         self._metrics = None if obs is None else obs.metrics
+        self._cal = None if obs is None else getattr(obs, "calibration", None)
         if obs is not None and obs.audit is not None \
                 and controller is not None and hasattr(controller, "audit"):
             controller.audit = obs.audit
@@ -294,6 +299,10 @@ class ServingRuntime:
             from repro.obs import serving_metrics
 
             serving_metrics(self.telemetry, self._metrics)
+            if self._cal is not None:
+                from repro.obs import export_calibration
+
+                export_calibration(self._cal, self._metrics)
         return self.telemetry
 
     # ---------------------------------------------------------- edge tier
@@ -337,6 +346,7 @@ class ServingRuntime:
             on_device, pred, conf = self.core.gate(req.sample, branch, p_tar)
             ctx = est = None
         if on_device:
+            ok = self.core.correct(req.sample, pred)
             self.telemetry.add(
                 RequestRecord(
                     req_id=req.req_id,
@@ -348,7 +358,7 @@ class ServingRuntime:
                     edge_start_s=start_s,
                     edge_done_s=t,
                     complete_s=t,
-                    correct=self.core.correct(req.sample, pred),
+                    correct=ok,
                     deadline_s=req.deadline_s,
                     context=ctx,
                     est_context=est,
@@ -356,12 +366,17 @@ class ServingRuntime:
             )
             if self.obs is not None and self.obs.enabled:
                 self._observe_complete(req, d, branch, p_tar, conf, ctx, est,
-                                       start_s, t, on_device=True)
+                                       start_s, t, on_device=True,
+                                       edge_correct=ok)
         else:
-            self._batch.append(
-                _Pending(req, branch, p_tar, conf, start_s, t,
+            p = _Pending(req, branch, p_tar, conf, start_s, t,
                          self.payload_nbytes(branch), ctx, est)
-            )
+            if self.obs is not None and self.obs.enabled:
+                # the edge branch's own verdict, evaluated before the
+                # cloud main head replaces the answer: the calibration
+                # stream audits the GATE, not the cloud
+                p.edge_correct = self.core.correct(req.sample, pred)
+            self._batch.append(p)
             if len(self._batch) >= self.config.max_batch:
                 self._flush_batch(t)
             elif len(self._batch) == 1 and self.config.batch_window_s > 0:
@@ -444,6 +459,7 @@ class ServingRuntime:
                     on_device=False, uplink_start_s=p.uplink_start_s,
                     uplink_done_s=p.uplink_done_s,
                     cloud_start_s=p.cloud_start_s, complete_s=t,
+                    edge_correct=p.edge_correct,
                 )
 
     # -------------------------------------------------------- observability
@@ -454,6 +470,7 @@ class ServingRuntime:
         uplink_done_s: Optional[float] = None,
         cloud_start_s: Optional[float] = None,
         complete_s: Optional[float] = None,
+        edge_correct: Optional[bool] = None,
     ) -> None:
         """Trace + metrics for one completed request (sinks attached)."""
         from repro.obs import build_spans, request_record
@@ -464,6 +481,10 @@ class ServingRuntime:
                               path="edge" if on_device else "cloud")
             self._metrics.observe("serving_latency_ms",
                                   (complete - req.arrival_s) * 1e3)
+        if self._cal is not None and edge_correct is not None:
+            self._cal.update_one(
+                0, ctx if ctx is not None else _GLOBAL_CONTEXT, branch,
+                conf, edge_correct, on_device)
         if self._trace is None:
             return
         gate = {
@@ -474,6 +495,7 @@ class ServingRuntime:
                                  getattr(self.plan, "criterion", None)),
             "context": ctx,
             "est_context": est,
+            "correct": None if edge_correct is None else int(edge_correct),
         }
         spans = build_spans(req.arrival_s, edge_start_s, edge_done_s,
                             uplink_start_s, uplink_done_s, cloud_start_s,

@@ -1,0 +1,561 @@
+"""Calibration-health plane tests: reliability sketches, SLOs, reports.
+
+Three stacks maintain the same mergeable windowed reliability sketch --
+the event-driven ServingRuntime (per request at gate time), the host
+FleetSimulator (columnar per window), and the CompiledFleetSimulator
+(bin histograms inside the jitted window program). The anchor tests pin
+them together bin-for-bin, pin the sketch's ECE to
+`repro.core.metrics.ece`, and drive the calibration SLO end to end:
+an under-confident poisoned canary trips the windowed ECE cap BEFORE
+any gap-family verdict, rolls back, and the whole chain reconstructs
+from the audit log. The satellites ride along: negative tests that
+corrupt artifacts in memory and demand the right violation, Prometheus
+exposition conformance with a round-trip parser, and the drift report
+that diffs deployed ECE against the fit-time promise frozen into the
+PlanBank.
+"""
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import ece as core_ece
+from repro.fleet.scenarios import reference_fleet, run_fleet
+from repro.obs import (
+    AuditLog,
+    MetricsRegistry,
+    Observability,
+    ReliabilitySketch,
+    export_calibration,
+    full_observability,
+)
+from repro.obs.calibration import (
+    GLOBAL_CONTEXT,
+    bin_edges,
+    bin_index,
+    block_reliability,
+    merge_sketches,
+)
+from repro.obs.calibration_report import build_report, main as report_main
+from repro.obs.check import (
+    check_calibration,
+    run_checks,
+    verify_rollback_chain,
+)
+from repro.orchestration import ChurnSchedule, Orchestrator
+from repro.orchestration.qos import CellSLO
+from repro.serving.scenarios import (
+    fit_drift_plans,
+    run_congested_markov,
+    synthetic_cascade_logits,
+    synthetic_distorted_cascade,
+)
+
+
+@pytest.fixture(scope="module")
+def drift_data():
+    val, test = synthetic_distorted_cascade(
+        directions={"gaussian_blur": "under"}
+    )
+    return val, test, fit_drift_plans(val)
+
+
+def small_fleet(drift_data, seed=0, n_cells=6, requests_per_cell=200):
+    val, test, _ = drift_data
+    return reference_fleet(
+        n_cells=n_cells, requests_per_cell=requests_per_cell, seed=seed,
+        val=val, test=test, cloud_servers=2,
+    )
+
+
+def _synthetic_stream(n=4000, seed=0):
+    rng = np.random.default_rng(seed)
+    conf = rng.uniform(0.05, 1.0, n)
+    correct = rng.random(n) < conf ** 1.7  # miscalibrated on purpose
+    on = conf >= 0.8
+    return conf, correct.astype(bool), on
+
+
+# ------------------------------------------------------------ sketch unit
+def test_bin_edges_and_boundary_assignment():
+    edges = bin_edges(15)
+    assert len(edges) == 16 and edges[0] == 0.0 and edges[-1] == 1.0
+    # searchsorted(side="left"): a confidence exactly ON an edge lands in
+    # the bin BELOW it (bins are left-open, right-closed], and conf <= 0
+    # goes to the overflow slot -- the same rule the compiled backend
+    # applies, so boundary confidences bin identically on both paths
+    idx = bin_index(np.array([0.0, 1e-12, edges[1], 0.5, 1.0]))
+    assert idx[0] == 15          # overflow: nothing has conf <= 0
+    assert idx[1] == 0
+    assert idx[2] == 0           # exactly on edge 1 -> bin 0
+    assert idx[4] == 14          # conf == 1.0 -> top bin, not overflow
+
+
+def test_sketch_merge_is_exact_sum():
+    conf, correct, on = _synthetic_stream()
+    full = ReliabilitySketch()
+    full.update(0, "clean", 1, conf, correct, on)
+    full.note_ungated(0, 7)
+    half_a, half_b = ReliabilitySketch(), ReliabilitySketch()
+    half_a.update(0, "clean", 1, conf[:2000], correct[:2000], on[:2000])
+    half_b.update(0, "clean", 1, conf[2000:], correct[2000:], on[2000:])
+    half_b.note_ungated(0, 7)
+    merged = merge_sketches([half_a, half_b])
+    assert merged.keys() == full.keys()
+    for key in full.keys():
+        a, b = full.block(*key), merged.block(*key)
+        # integer-valued rows (counts, correct, on, on_correct) are exact;
+        # the accumulated float sums differ only by summation order
+        np.testing.assert_array_equal(b[[0, 1, 5, 6]], a[[0, 1, 5, 6]])
+        np.testing.assert_allclose(b[2:5], a[2:5], rtol=0, atol=1e-9)
+    assert merged.ungated_count(0) == 7
+    assert merged.total_count() == full.total_count() == 4007
+    with pytest.raises(ValueError):
+        full.merge(ReliabilitySketch(n_bins=7))
+
+
+def test_sketch_statistics_match_closed_forms():
+    conf, correct, on = _synthetic_stream()
+    sk = ReliabilitySketch()
+    sk.update(3, GLOBAL_CONTEXT, 2, conf, correct, on)
+    assert sk.ece() == pytest.approx(
+        float(core_ece(conf, correct)), abs=1e-12)
+    assert sk.brier() == pytest.approx(
+        float(np.mean((conf - correct) ** 2)), abs=1e-12)
+    assert sk.coverage() == pytest.approx(
+        float(correct[on].mean()), abs=1e-12)
+    bins = sk.reliability()
+    assert sum(b["count"] for b in bins) == len(conf)
+    for b in bins:
+        assert b["residual"] == pytest.approx(
+            b["mean_conf"] - b["accuracy"], abs=1e-12)
+
+
+def test_sketch_json_roundtrip(tmp_path):
+    conf, correct, on = _synthetic_stream(n=500)
+    sk = ReliabilitySketch()
+    sk.update(0, "clean", 1, conf, correct, on)
+    sk.update(2, "contrast@4", 2, conf[:100], correct[:100], on[:100])
+    sk.note_ungated(2, 13)
+    path = str(tmp_path / "sketch.json")
+    sk.save(path)
+    back = ReliabilitySketch.load(path)
+    assert back.n_bins == sk.n_bins and back.keys() == sk.keys()
+    for key in sk.keys():
+        assert np.array_equal(back.block(*key), sk.block(*key))
+    assert back.ungated_count() == 13
+    with pytest.raises(ValueError):
+        sk.update_binned(0, "clean", 1, np.zeros((7, 3)))
+
+
+# ----------------------------------------------------------- serving stack
+def test_serving_sketch_reproduces_trace_ece():
+    """The runtime's sketch must reproduce `core.metrics.ece` from the
+    raw unsampled trace: the gate records carry the EDGE prediction's
+    correctness captured at gate time, offloaded requests included."""
+    exits, final, y = synthetic_cascade_logits(512)
+    from repro.core.calibration import TemperatureScaling
+    from repro.core.policy import OffloadPlan
+
+    plan = OffloadPlan(
+        p_tar=0.8,
+        calibrators=[TemperatureScaling.from_temperature(1.0),
+                     TemperatureScaling.from_temperature(1.0)],
+    )
+    obs = full_observability()
+    run_congested_markov(plan, exits, final, y, n_requests=400,
+                         with_controller=True, obs=obs)
+    recs = obs.trace.records
+    assert run_checks(recs, obs.metrics, obs.audit.records,
+                      calibration=obs.calibration) == []
+    gates = [r["gate"] for r in recs if r["gate"] is not None]
+    assert gates and all(g["correct"] in (0, 1) for g in gates)
+    conf = np.array([g["confidence"] for g in gates])
+    cor = np.array([g["correct"] for g in gates], bool)
+    assert obs.calibration.ece() == pytest.approx(
+        float(core_ece(conf, cor)), abs=1e-9)
+    assert obs.calibration.gated_count() == len(gates) == 400
+    # the derived gauges landed in the registry under stable names
+    assert obs.metrics.gauge_value("calibration_ece") is not None
+    assert obs.metrics.gauge_value("calibration_gated_total", cell=0) == 400
+
+
+# ----------------------------------------------- host <-> compiled parity
+def _fleet_sketches(drift_data, orchestrator=None):
+    scn = small_fleet(drift_data)
+    out = []
+    for backend in (None, "compiled"):
+        cal = ReliabilitySketch()
+        metrics = MetricsRegistry()
+        orch = orchestrator() if orchestrator else None
+        run_fleet(drift_data[2][2], scn, backend=backend, orchestrator=orch,
+                  obs=Observability(metrics=metrics, calibration=cal))
+        assert check_calibration(cal, metrics=metrics) == []
+        out.append(cal)
+    return out
+
+
+def _assert_sketch_parity(host, compiled):
+    """Counts exact, accumulated float sums to round-off, key for key."""
+    assert compiled.keys() == host.keys()
+    for key in host.keys():
+        a, b = host.block(*key), compiled.block(*key)
+        np.testing.assert_array_equal(b[0], a[0])  # counts
+        np.testing.assert_array_equal(b[1], a[1])  # correct
+        np.testing.assert_array_equal(b[5], a[5])  # on-device
+        np.testing.assert_array_equal(b[6], a[6])  # on-device correct
+        np.testing.assert_allclose(b[2:5], a[2:5], rtol=0, atol=1e-9)
+    assert {c: compiled.ungated_count(c) for c in compiled.cells()} == \
+        {c: host.ungated_count(c) for c in host.cells()}
+
+
+def test_compiled_sketch_parity(drift_data):
+    """The jitted window program's segment-summed bin histograms must
+    agree with the host simulator's columnar accumulation bin-for-bin."""
+    host, compiled = _fleet_sketches(drift_data)
+    assert host.keys(), "sketch must be populated"
+    _assert_sketch_parity(host, compiled)
+
+
+def test_compiled_sketch_parity_under_churn(drift_data):
+    def orch():
+        return Orchestrator(churn=ChurnSchedule.outage(
+            [0, 2], start_s=2.0, duration_s=4.0))
+
+    host, compiled = _fleet_sketches(drift_data, orchestrator=orch)
+    _assert_sketch_parity(host, compiled)
+
+
+def test_compiled_sketch_parity_backhaul_counts_ungated(drift_data):
+    scn = small_fleet(drift_data)
+
+    def orch():
+        return Orchestrator(churn=ChurnSchedule.outage(
+            list(range(scn.topology.n_cells)), start_s=2.0, duration_s=3.0))
+
+    host, compiled = _fleet_sketches(drift_data, orchestrator=orch)
+    _assert_sketch_parity(host, compiled)
+    # backhauled windows never ran a gate: they land in the ungated
+    # column, and gated + ungated still conserves every request
+    assert host.ungated_count() > 0
+
+
+# ------------------------------------------------- calibration SLO + audit
+@pytest.fixture(scope="module")
+def calibration_canary(drift_data):
+    """A guarded rollout whose SLO watches the windowed calibration
+    gauges. The poison is UNDER-confidence (T x20): the canary offloads
+    nearly everything, so the gap-family SLOs starve below their
+    gate-sample evidence floor and only the calibration stream -- which
+    covers offloaded requests too -- can see the failure."""
+    from repro.orchestration.scenarios import _rollout_pieces, poisoned_bank
+
+    val, test, (_, _, bank) = drift_data
+    scn = small_fleet(drift_data, n_cells=8, requests_per_cell=300)
+    cal_slo = CellSLO(reliability_shortfall=0.12, ece_cap=0.30,
+                      min_requests=12, min_gate_samples=25)
+    orch, monitor, rollout = _rollout_pieces(
+        scn, poisoned_bank(bank, temp_scale=20.0), slo=cal_slo)
+    audit, metrics = AuditLog(), MetricsRegistry()
+    cal = ReliabilitySketch()
+    run_fleet(bank, scn, orchestrator=orch,
+              obs=Observability(audit=audit, metrics=metrics,
+                                calibration=cal))
+    return audit, metrics, cal, rollout
+
+
+def test_calibration_slo_trips_before_gap_and_rolls_back(calibration_canary):
+    audit, metrics, cal, rollout = calibration_canary
+    assert rollout.state == "rolled_back"
+    trips = audit.filter(actor="qos_monitor", action="qos_trip")
+    ece_trips = [r for r in trips if r["evidence"]["metric"] == "ece"]
+    gap_trips = [r for r in trips if r["evidence"]["metric"]
+                 in ("reliability_gap", "reliability_shortfall")]
+    assert ece_trips, "the calibration SLO must trip on the canary"
+    if gap_trips:  # early warning: calibration sees it first
+        assert min(r["t_s"] for r in ece_trips) < min(
+            r["t_s"] for r in gap_trips)
+    # trip evidence is self-contained: metric/value/cap/op plus the
+    # offending reliability bins and the evidence floor that was met
+    for r in ece_trips:
+        ev = r["evidence"]
+        assert ev["value"] > ev["cap"] and ev["op"] == ">"
+        assert ev["cal_samples"] >= 25
+        assert ev["bins"] and all(
+            {"bin", "count", "residual"} <= set(b) for b in ev["bins"])
+
+
+def test_calibration_rollback_reconstructs_from_audit(calibration_canary):
+    audit, metrics, cal, _ = calibration_canary
+    chain = verify_rollback_chain(audit.records)
+    assert chain["ok"], chain["why"]
+    assert all(t["evidence"]["metric"] == "ece" for t in chain["trips"])
+    assert check_calibration(cal, metrics=metrics) == []
+    # run_checks wires the same chain requirement
+    assert run_checks(metrics=metrics, audit_records=audit.records,
+                      require_rollback_chain=True, calibration=cal) == []
+
+
+# ------------------------------------- negative tests: corrupted artifacts
+@pytest.fixture(scope="module")
+def churn_artifacts(drift_data):
+    scn = small_fleet(drift_data)
+    churn = ChurnSchedule.outage([0, 2], start_s=2.0, duration_s=4.0)
+    obs = full_observability(trace_sample_every=1)
+    run_fleet(drift_data[2][2], scn, with_controller=True,
+              orchestrator=Orchestrator(churn=churn), obs=obs)
+    assert run_checks(obs.trace.records, obs.metrics, obs.audit.records,
+                      calibration=obs.calibration) == []
+    return obs
+
+
+def test_check_fails_on_torn_span_timeline(churn_artifacts):
+    recs = copy.deepcopy(churn_artifacts.trace.records)
+    recs[5]["spans"][-1]["end_s"] += 0.25  # tear the telescoping timeline
+    errs = run_checks(recs)
+    assert errs and any(
+        "gap between" in e or "last span ends" in e for e in errs)
+    assert any(f"req {recs[5]['req_id']}" in e for e in errs)
+
+
+def test_check_fails_on_dropped_churn_request(churn_artifacts):
+    """Conservation across churn: silently dropping one completed request
+    from the unsampled trace must break the trace-accounting check."""
+    recs = [r for r in churn_artifacts.trace.records[1:]]
+    errs = run_checks(recs, churn_artifacts.metrics)
+    assert errs and any("trace" in e and "records" in e for e in errs)
+
+
+def test_check_fails_on_truncated_rollback_chain(calibration_canary):
+    audit, metrics, cal, _ = calibration_canary
+    truncated = [r for r in audit.records if r["action"] != "rollout_rollback"]
+    errs = run_checks(audit_records=truncated, require_rollback_chain=True)
+    assert errs and "rollout_rollback" in errs[0]
+    no_trips = [r for r in audit.records if r["action"] != "qos_trip"]
+    errs = run_checks(audit_records=no_trips, require_rollback_chain=True)
+    assert errs and "qos_trip" in errs[0]
+
+
+def test_check_calibration_catches_tampered_sketch(churn_artifacts):
+    obs = churn_artifacts
+    # inflate one cell's counts: totals no longer match the counters
+    forged = copy.deepcopy(obs.calibration)
+    key = forged.keys()[0]
+    forged.update(key[0], key[1], key[2], [0.9], [True], [True])
+    errs = check_calibration(forged, metrics=obs.metrics)
+    assert errs and "sketch total" in errs[0]
+    # corrupt the accumulated confidence sums: counts still conserve,
+    # but the unsampled-trace ECE reproduction must now fail
+    warped = copy.deepcopy(obs.calibration)
+    warped.block(*warped.keys()[0])[2] *= 1.5
+    errs = check_calibration(warped, trace_records=obs.trace.records)
+    assert errs and "ECE" in errs[0]
+
+
+# ------------------------------------ Prometheus exposition conformance
+def _parse_prometheus(text):
+    """Minimal 0.0.4 parser: families {name: {type, help, samples}} where
+    samples is a list of (sample_name, labels_dict, value)."""
+    import re
+
+    families, cur = {}, None
+    label_re = re.compile(r'(\w+)="((?:[^"\\]|\\.)*)"')
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            name, help_text = line[len("# HELP "):].split(" ", 1)
+            cur = families.setdefault(
+                name, {"type": None, "help": None, "samples": []})
+            cur["help"] = (help_text.replace("\\n", "\n")
+                           .replace("\\\\", "\\"))
+        elif line.startswith("# TYPE "):
+            name, kind = line[len("# TYPE "):].split(" ", 1)
+            families.setdefault(
+                name, {"type": None, "help": None, "samples": []}
+            )["type"] = kind
+        else:
+            sample_name, rest = re.match(r"([\w:]+)(.*)", line).groups()
+            labels = {}
+            if rest.startswith("{"):
+                body, rest = rest[1:].split("}", 1)
+                for k, v in label_re.findall(body):
+                    labels[k] = (v.replace("\\n", "\n")
+                                 .replace('\\"', '"').replace("\\\\", "\\"))
+            value = float(rest.strip())
+            fam = sample_name
+            for suffix in ("_bucket", "_sum", "_count"):
+                if fam.endswith(suffix) and fam[:-len(suffix)] in families:
+                    fam = fam[:-len(suffix)]
+                    break
+            families[fam]["samples"].append((sample_name, labels, value))
+    return families
+
+
+def _assert_conformant(m: MetricsRegistry):
+    text = m.to_prometheus()
+    families = _parse_prometheus(text)
+    for name, fam in families.items():
+        assert fam["type"] in ("counter", "gauge", "histogram"), name
+        assert fam["help"], f"{name} lacks HELP"
+        assert fam["samples"], f"{name} has no samples"
+        if fam["type"] != "histogram":
+            continue
+        # per label-set series: le ascending, +Inf terminal, cumulative
+        # counts non-decreasing, _count == the +Inf bucket
+        series = {}
+        for sname, labels, value in fam["samples"]:
+            rest = tuple(sorted((k, v) for k, v in labels.items()
+                                if k != "le"))
+            series.setdefault(rest, {})[
+                (sname, labels.get("le"))] = value
+        for rest, samples in series.items():
+            les = [(le, v) for (sn, le), v in samples.items()
+                   if sn == f"{name}_bucket"]
+            assert les, (name, rest)
+            finite = [(float(le), v) for le, v in les if le != "+Inf"]
+            assert sorted(l for l, _ in finite) == [l for l, _ in finite]
+            cum = [v for _, v in sorted(finite)]
+            assert cum == sorted(cum), (name, rest)
+            inf = [v for le, v in les if le == "+Inf"]
+            assert len(inf) == 1, f"{name}: need exactly one +Inf bucket"
+            assert not finite or inf[0] >= cum[-1]
+            assert samples[(f"{name}_count", None)] == inf[0]
+    return families
+
+
+def test_prometheus_conformance_on_real_artifacts(churn_artifacts):
+    """The artifact CI uploads must parse: HELP/TYPE per family, ordered
+    cumulative buckets with a terminal +Inf, and the parsed numbers
+    round-trip against the registry that wrote them."""
+    m = churn_artifacts.metrics
+    families = _assert_conformant(m)
+    assert "calibration_confidence" in families
+    assert families["calibration_confidence"]["type"] == "histogram"
+    assert "calibration_ece" in families
+    # round-trip: parsed counter samples sum to the registry totals
+    parsed_total = sum(
+        v for _, _, v in families["fleet_requests_total"]["samples"])
+    assert parsed_total == m.counter_total("fleet_requests_total")
+    cells = churn_artifacts.calibration.cells()
+    gated = {
+        labels["cell"]: v
+        for _, labels, v in families["calibration_gated_total"]["samples"]}
+    assert gated == {
+        str(c): churn_artifacts.calibration.gated_count(c) for c in cells}
+
+
+def test_prometheus_label_escaping_roundtrip():
+    m = MetricsRegistry()
+    nasty = 'quote " backslash \\ newline \n done'
+    m.set_gauge("escape_check", 1.5, ctx=nasty)
+    m.describe("escape_check", "help with \\ and\nnewline")
+    text = m.to_prometheus()
+    assert '\\"' in text and "\\n" in text and "\n done" not in text
+    families = _parse_prometheus(text)
+    (_, labels, value), = families["escape_check"]["samples"]
+    assert labels["ctx"] == nasty and value == 1.5
+    assert families["escape_check"]["help"] == "help with \\ and\nnewline"
+
+
+def test_prometheus_histogram_le_ordering_unit():
+    m = MetricsRegistry()
+    m.declare_histogram("order_check", (0.5, 1.0, 2.0, 4.0))
+    for v in (0.1, 0.7, 1.5, 3.0, 9.0):
+        m.observe("order_check", v, cell=0)
+    fam = _assert_conformant(m)["order_check"]
+    buckets = [(labels["le"], v) for sname, labels, v in fam["samples"]
+               if sname == "order_check_bucket"]
+    assert [b[0] for b in buckets] == ["0.5", "1", "2", "4", "+Inf"]
+    assert [b[1] for b in buckets] == [1, 2, 3, 4, 5]
+
+
+# ----------------------------------------------------- drift report + CLI
+def test_fit_ece_frozen_into_bank_metadata(drift_data):
+    from repro.orchestration.scenarios import poisoned_bank
+
+    _, _, (_, _, bank) = drift_data
+    fit = bank.metadata.get("fit_ece")
+    assert fit and set(fit) == set(bank.contexts)
+    for per_branch in fit.values():
+        assert per_branch and all(
+            0.0 <= v <= 1.0 for v in per_branch.values())
+    # the poisoned candidate inherits the HONEST fit-time promise: that
+    # is exactly what the drift report diffs against
+    assert poisoned_bank(bank).metadata["fit_ece"] == fit
+
+
+def test_build_report_flags_only_drifted_regimes():
+    rng = np.random.default_rng(1)
+    sk = ReliabilitySketch()
+    conf = rng.uniform(0.3, 1.0, 3000)
+    sk.update(0, "clean", 1, conf, rng.random(3000) < conf, conf >= 0.8)
+    sk.update(0, "contrast@4", 1, conf, rng.random(3000) < conf - 0.25,
+              conf >= 0.8)
+    well = sk.ece(context="clean")
+    bank_meta = {"fit_ece": {"clean": {"1": well},
+                             "contrast@4": {"1": 0.01}},
+                 "default_context": "clean"}
+    report = build_report(sk, bank_meta=bank_meta, drift_cap=0.05)
+    assert report["flagged"]
+    assert not report["regimes"]["clean"]["drifted"]
+    assert report["regimes"]["contrast@4"]["drifted"]
+    assert report["flags"] and "contrast@4" in report["flags"][0]
+    # per-regime diagram data is self-consistent with the block view
+    bins = report["regimes"]["clean"]["bins"]
+    assert bins == block_reliability(sk.merged_block(context="clean"))
+    # without a bank there is no promise to diff: nothing can be flagged
+    bare = build_report(sk, drift_cap=0.05)
+    assert not bare["flagged"]
+    assert bare["regimes"]["contrast@4"]["fit_ece"] is None
+
+
+def test_report_resolves_global_context_to_default():
+    """A context-free serving deployment keys its sketch by
+    GLOBAL_CONTEXT; the report resolves that against the bank's default
+    context so the fit-time promise still applies."""
+    rng = np.random.default_rng(2)
+    sk = ReliabilitySketch()
+    conf = rng.uniform(0.3, 1.0, 2000)
+    sk.update(0, GLOBAL_CONTEXT, 1, conf, rng.random(2000) < conf - 0.3,
+              conf >= 0.8)
+    report = build_report(
+        sk, bank_meta={"fit_ece": {"clean": {"1": 0.02}},
+                       "default_context": "clean"})
+    reg = report["regimes"][GLOBAL_CONTEXT]
+    assert reg["fit_ece"] == 0.02 and reg["drifted"]
+
+
+def test_calibration_report_cli(tmp_path, drift_data):
+    """Exit code 1 == drift found (linter convention); multiple sketches
+    merge; the JSON artifact carries the flags CI asserts on."""
+    _, _, (_, _, bank) = drift_data
+    bank_path = str(tmp_path / "bank.json")
+    bank.save(bank_path)
+    rng = np.random.default_rng(3)
+    conf = rng.uniform(0.3, 1.0, 2000)
+    a, b = ReliabilitySketch(), ReliabilitySketch()
+    ctx = bank.default_context
+    a.update(0, ctx, 1, conf[:1000], rng.random(1000) < conf[:1000] - 0.3,
+             conf[:1000] >= 0.8)
+    b.update(0, ctx, 1, conf[1000:], rng.random(1000) < conf[1000:] - 0.3,
+             conf[1000:] >= 0.8)
+    pa, pb = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    a.save(pa)
+    b.save(pb)
+    out = str(tmp_path / "report.json")
+    rc = report_main(["--sketch", pa, pb, "--bank", bank_path, "--out", out])
+    assert rc == 1
+    report = json.loads(open(out).read())
+    assert report["flagged"] and report["regimes"][ctx]["drifted"]
+    assert report["regimes"][ctx]["count"] == 2000  # both sketches merged
+    # a well-calibrated deployment exits 0
+    good = ReliabilitySketch()
+    good.update(0, ctx, 1, conf, rng.random(2000) < conf, conf >= 0.8)
+    pg = str(tmp_path / "good.json")
+    good.save(pg)
+    fit = bank.metadata["fit_ece"][ctx]["1"]
+    cap = abs(good.ece() - fit) + 0.05
+    assert report_main(["--sketch", pg, "--bank", bank_path,
+                        "--drift-cap", str(cap)]) == 0
