@@ -136,11 +136,12 @@ def bench_serving_runtime(n_requests=2000, out_path="BENCH_serving.json"):
                      TemperatureScaling.from_temperature(1.0)],
     )
 
-    def scenario(with_controller, obs=None):
+    def scenario(with_controller, obs=None, controller_config=None):
         t0 = time.perf_counter()
         tel = run_congested_markov(
             plan, exits, final, y,
             n_requests=n_requests, with_controller=with_controller, obs=obs,
+            controller_config=controller_config,
         )
         return tel.summary(), time.perf_counter() - t0
 
@@ -172,6 +173,80 @@ def bench_serving_runtime(n_requests=2000, out_path="BENCH_serving.json"):
         "bound": 3.0,  # CI assertion; documented in docs/observability.md
         "bit_exact": obs_summary == static,
     }
+
+    # congested-uplink compression sweep (ISSUE 10): controller arms
+    # differing ONLY in the codec axis -- bytes-blind (no axis: the
+    # legacy candidate table), level-0-only (identity codec: MUST
+    # reproduce the bytes-blind run bit-exactly), and compression-aware
+    # (levels 0/1/2 priced per candidate). Each arm carries a metrics
+    # registry so uplink bytes are the runtime's own post-codec
+    # serving_uplink_bytes_total counter, not a model. With every axis
+    # free the aware controller spends part of the byte win on routing
+    # (compression makes offloading cheap, so the latency-optimal split
+    # moves EARLIER -- bigger payloads, more offloads, much better p99),
+    # so the >=4x byte claim is asserted on a split-pinned pair
+    # (`branches` pins the deployed branch, p_tar held: the codec level
+    # is the only knob) while the free-axes pair carries the p99 and
+    # reliability-gap claims. All four assertions are CI gates.
+    from repro.obs import MetricsRegistry, Observability
+    from repro.serving.controller import ControllerConfig
+
+    def _comp_arm(levels, pin_branch=False):
+        cfg = ControllerConfig(
+            interval_s=0.5, window_s=1.0, min_accuracy=0.9,
+            compression_levels=levels,
+            branches=(plan.exit_index + 1,) if pin_branch else None,
+        )
+        reg = MetricsRegistry()
+        s, _ = scenario(True, obs=Observability(metrics=reg),
+                        controller_config=cfg)
+        return s, reg.counter_total("serving_uplink_bytes_total")
+
+    blind, blind_bytes = _comp_arm(None)
+    lvl0, lvl0_bytes = _comp_arm((0,))
+    aware, aware_bytes = _comp_arm((0, 1, 2))
+    pin_blind, pin_blind_bytes = _comp_arm(None, pin_branch=True)
+    pin_aware, pin_aware_bytes = _comp_arm((0, 1, 2), pin_branch=True)
+    byte_cut = pin_blind_bytes / max(pin_aware_bytes, 1.0)
+    added_gap = aware["miscalibration_gap"] - blind["miscalibration_gap"]
+    compression = {
+        "levels": [0, 1, 2],
+        "bytes_blind": blind,
+        "level0_identity": lvl0,
+        "compression_aware": aware,
+        "uplink_bytes_blind": blind_bytes,
+        "uplink_bytes_level0": lvl0_bytes,
+        "uplink_bytes_aware": aware_bytes,
+        "uplink_byte_cut_free_axes": blind_bytes / max(aware_bytes, 1.0),
+        "pinned_split": {
+            "branch": plan.exit_index + 1,
+            "bytes_blind": pin_blind,
+            "compression_aware": pin_aware,
+            "uplink_bytes_blind": pin_blind_bytes,
+            "uplink_bytes_aware": pin_aware_bytes,
+            "uplink_byte_cut": byte_cut,
+        },
+        "added_reliability_gap": added_gap,
+        "p99_blind_ms": blind["p99_ms"],
+        "p99_aware_ms": aware["p99_ms"],
+        "level0_bit_exact": lvl0 == blind and lvl0_bytes == blind_bytes,
+    }
+    if not compression["level0_bit_exact"]:
+        raise AssertionError(
+            "identity-codec (level 0) controller is not bit-exact with "
+            "the bytes-blind controller")
+    if byte_cut < 4.0:
+        raise AssertionError(
+            f"compression-aware controller cut uplink bytes only "
+            f"{byte_cut:.2f}x (< 4x) at the pinned split")
+    if added_gap > 0.01:
+        raise AssertionError(
+            f"compression added {added_gap:.4f} reliability gap (> 0.01)")
+    if not aware["p99_ms"] < blind["p99_ms"]:
+        raise AssertionError(
+            f"compression-aware p99 {aware['p99_ms']:.1f}ms did not "
+            f"strictly beat bytes-blind {blind['p99_ms']:.1f}ms")
+
     # metadata derived from the scenario module itself, never duplicated
     import inspect
 
@@ -193,6 +268,7 @@ def bench_serving_runtime(n_requests=2000, out_path="BENCH_serving.json"):
         "static": static,
         "controller": ctrl,
         "obs_overhead": obs_overhead,
+        "compression": compression,
         "p99_improvement": 1.0 - ctrl["p99_ms"] / static["p99_ms"],
         "miss_rate_improvement": static["deadline_miss_rate"]
         - ctrl["deadline_miss_rate"],
@@ -205,6 +281,8 @@ def bench_serving_runtime(n_requests=2000, out_path="BENCH_serving.json"):
         f"p99_static_ms={static['p99_ms']:.1f};"
         f"p99_ctrl_ms={ctrl['p99_ms']:.1f};"
         f"obs_overhead={obs_overhead['ratio']:.2f}x;"
+        f"comp_bytes_cut={byte_cut:.1f}x;"
+        f"comp_p99_ms={aware['p99_ms']:.1f};"
         f"artifact={out_path}"
     )
 
@@ -360,7 +438,7 @@ def bench_fleet(out_path="BENCH_fleet.json", scenario_names=None):
     val, test = synthetic_distorted_cascade(
         directions={"gaussian_blur": "under"}
     )
-    uncal, _, bank = fit_drift_plans(val)
+    uncal, global_plan, bank = fit_drift_plans(val)
     scenario = reference_fleet(val=val, test=test)
 
     runs, wall = {}, {}
@@ -494,6 +572,95 @@ def bench_fleet(out_path="BENCH_fleet.json", scenario_names=None):
         },
     }
 
+    # fleet compression sweep (ISSUE 10): the same three-arm codec sweep
+    # as BENCH_serving, on the 64-cell fleet. Bytes-blind re-uses the
+    # reference controller config; level-0-only restricts the axis to
+    # the identity codec and MUST reproduce the bytes-blind run (and the
+    # obs-off expert_bank_controller arm above) bit-exactly; the
+    # compression-aware arm prices levels 0/1/2 per (cell, candidate).
+    # Uplink bytes come from the simulator's own per-cell
+    # fleet_uplink_bytes_total counter (uplink + backhaul, post-codec).
+    # The compiled stack's level-0 identity is the `fleet_compiled`
+    # parity verdict above (static deployments run at level 0); a
+    # level-2 static plan is additionally parity-checked host-vs-
+    # compiled so the codec axis itself is pinned across backends.
+    from repro.fleet.controller import FleetControllerConfig
+    from repro.obs import MetricsRegistry, Observability
+
+    def _comp_fleet_arm(levels, pin_branch=False):
+        cfg = FleetControllerConfig(
+            interval_s=1.0, window_s=2.0,
+            p_tar_grid=None if pin_branch else (0.3, 0.5, 0.7, 0.8),
+            branches=((bank.default_plan.exit_index + 1,)
+                      if pin_branch else None),
+            min_accuracy=0.8, cloud_rho_max=0.9,
+            compression_levels=levels,
+        )
+        reg = MetricsRegistry()
+        tel = run_fleet(bank, scenario, with_controller=True,
+                        controller_config=cfg,
+                        obs=Observability(metrics=reg))
+        return (tel.fleet_summary(),
+                reg.counter_total("fleet_uplink_bytes_total"))
+
+    blind_f, blind_f_bytes = _comp_fleet_arm(None)
+    lvl0_f, lvl0_f_bytes = _comp_fleet_arm((0,))
+    aware_f, aware_f_bytes = _comp_fleet_arm((0, 1, 2))
+    pin_blind_f, pin_blind_f_bytes = _comp_fleet_arm(None, pin_branch=True)
+    pin_aware_f, pin_aware_f_bytes = _comp_fleet_arm((0, 1, 2),
+                                                     pin_branch=True)
+    plan_l2 = global_plan.with_compression(2)
+    l2_np, _ = _timed_run(plan_l2, scenario)
+    l2_c, _ = _timed_run(plan_l2, scenario, backend="compiled")
+    byte_cut_f = pin_blind_f_bytes / max(pin_aware_f_bytes, 1.0)
+    added_gap_f = (aware_f["miscalibration_gap"]
+                   - blind_f["miscalibration_gap"])
+    compression = {
+        "levels": [0, 1, 2],
+        "bytes_blind": blind_f,
+        "level0_identity": lvl0_f,
+        "compression_aware": aware_f,
+        "uplink_bytes_blind": blind_f_bytes,
+        "uplink_bytes_level0": lvl0_f_bytes,
+        "uplink_bytes_aware": aware_f_bytes,
+        "uplink_byte_cut_free_axes": blind_f_bytes / max(aware_f_bytes, 1.0),
+        "pinned_split": {
+            "branch": bank.default_plan.exit_index + 1,
+            "bytes_blind": pin_blind_f,
+            "compression_aware": pin_aware_f,
+            "uplink_bytes_blind": pin_blind_f_bytes,
+            "uplink_bytes_aware": pin_aware_f_bytes,
+            "uplink_byte_cut": byte_cut_f,
+        },
+        "added_reliability_gap": added_gap_f,
+        "p99_blind_ms": blind_f["p99_ms"],
+        "p99_aware_ms": aware_f["p99_ms"],
+        "level0_bit_exact": (lvl0_f == blind_f
+                             and lvl0_f_bytes == blind_f_bytes
+                             and lvl0_f == c),
+        "compiled_level2_parity": _summaries_match(l2_np, l2_c),
+    }
+    if not compression["level0_bit_exact"]:
+        raise AssertionError(
+            "fleet identity-codec (level 0) controller is not bit-exact "
+            "with the bytes-blind controller")
+    if byte_cut_f < 4.0:
+        raise AssertionError(
+            f"fleet compression-aware controller cut uplink bytes only "
+            f"{byte_cut_f:.2f}x (< 4x) at the pinned split")
+    if added_gap_f > 0.01:
+        raise AssertionError(
+            f"fleet compression added {added_gap_f:.4f} reliability gap "
+            f"(> 0.01)")
+    if not aware_f["p99_ms"] < blind_f["p99_ms"]:
+        raise AssertionError(
+            f"fleet compression-aware p99 {aware_f['p99_ms']:.1f}ms did "
+            f"not strictly beat bytes-blind {blind_f['p99_ms']:.1f}ms")
+    if not compression["compiled_level2_parity"]:
+        raise AssertionError(
+            "compiled backend diverged from host numpy on the level-2 "
+            "static plan")
+
     # adversarial orchestration matrix (churn, QoS, canary rollouts)
     from repro.orchestration import run_scenarios
 
@@ -520,6 +687,7 @@ def bench_fleet(out_path="BENCH_fleet.json", scenario_names=None):
         "gap_improvement": u["miscalibration_gap"] - c["miscalibration_gap"],
         "gate_backend": {"parity": parity, "windows": gate_rows},
         "fleet_compiled": fleet_compiled,
+        "compression": compression,
         "adversarial_scenarios": adversarial,
         "adversarial_wall_s": adversarial_wall,
         # wall-clock figures are machine-dependent and excluded from any
@@ -541,6 +709,7 @@ def bench_fleet(out_path="BENCH_fleet.json", scenario_names=None):
         f"gap_uncal={u['miscalibration_gap']:.3f};"
         f"gap_ctrl={c['miscalibration_gap']:.3f};"
         f"compiled_parity={compiled_parity};"
+        f"comp_bytes_cut={byte_cut_f:.1f}x;"
         f"compiled_1M_rps={fc['compiled_rps']:.0f}"
         f"(numpy={fc['numpy_rps']:.0f});"
         f"scenarios={n_pass}/{len(adversarial)};artifact={out_path}"

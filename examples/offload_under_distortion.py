@@ -46,6 +46,14 @@ per-context logits serve N cells at once through the vectorized
 the same comparison, hundreds of thousands of requests in seconds.
 
       PYTHONPATH=src python examples/offload_under_distortion.py --cells 64
+
+With --compression {1,2} the deployed plans -- the global plan AND every
+expert in the bank (`PlanBank.with_compression`) -- ship refused payloads
+through the bottleneck codec (`repro.kernels.compress`: per-tile absmax
+int8/int4) instead of raw float32, cutting uplink bytes ~3.9x/7.5x under
+the same Markov drift; both serving paths price the wire bytes.
+
+      PYTHONPATH=src python examples/offload_under_distortion.py --compression 2
 """
 import argparse
 import os
@@ -191,6 +199,10 @@ def main():
     ap.add_argument("--cells", type=int, default=0,
                     help="serve step 5 at fleet scale through repro.fleet "
                          "(N drifting cells; 0 = single-cell event loop)")
+    ap.add_argument("--compression", type=int, default=0, choices=(0, 1, 2),
+                    help="payload codec level for the deployed plans "
+                         "(repro.kernels.compress: 0 = raw float32, the "
+                         "paper's pricing; 1 = int8; 2 = int4)")
     args = ap.parse_args()
 
     print("== 1. train early-exit B-AlexNet (reduced synthetic CIFAR) ==")
@@ -224,6 +236,15 @@ def main():
     bank = PlanBank.from_json(bank.to_json())  # one JSON artifact, reloaded
     print(f"  global T1={global_plan.temperatures[0]:.2f}; experts:",
           {ctx: round(p.temperatures[0], 2) for ctx, p in bank.plans.items()})
+    if args.compression:
+        # the codec knob composes with the bank: every expert keeps its
+        # calibrator, only the wire format of refused payloads changes
+        global_plan = global_plan.with_compression(args.compression)
+        bank = bank.with_compression(args.compression)
+        for b in (1, 2):
+            print(f"  codec level {args.compression}: branch-{b} payload "
+                  f"{L.payload_bytes_for(b)} -> "
+                  f"{L.payload_bytes_for(b, args.compression)} bytes/request")
 
     print("\n== 4. offline per-context reliability at p_tar =", P_TAR, "==")
     offline_table("global plan", lambda ctx: global_plan, test, data.test_y)

@@ -28,7 +28,7 @@ input drift) and `benchmarks/run.py` (the distortion bench).
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -222,6 +222,24 @@ class PlanBank:
     @property
     def default_plan(self) -> OffloadPlan:
         return self.plans[self.default_context]
+
+    @property
+    def compression_level(self) -> int:
+        """Codec level of the DEFAULT plan -- what the serving layers
+        price uplink payloads at (experts share the wire format, only
+        their calibrators differ)."""
+        return int(getattr(self.default_plan, "compression_level", 0))
+
+    def with_compression(self, level: int) -> "PlanBank":
+        """New bank with every expert's payload codec set to `level`
+        (see `OffloadPlan.with_compression`): distortion-driven expert
+        selection and the wire format compose without touching each
+        other's state."""
+        return replace(
+            self,
+            plans={c: p.with_compression(level)
+                   for c, p in self.plans.items()},
+        )
 
     def plan_for(self, context: Optional[str]) -> OffloadPlan:
         """The expert for `context`, or the default plan for unknown/None

@@ -153,8 +153,17 @@ def rescore_plan(
     exit_stats: Optional[Sequence] = None,
     sample_weight=None,
     max_reliability_gap: Optional[float] = None,
+    compression_levels: Optional[Sequence[int]] = None,
+    final_correct_by_level: Optional[Dict[int, np.ndarray]] = None,
+    branches: Optional[Sequence[int]] = None,
 ):
-    """Re-select (deployed exit, effective p_tar) under CURRENT conditions.
+    """Re-select (deployed exit, effective p_tar, codec level) under
+    CURRENT conditions.
+
+    `branches` restricts the candidate table to the given physical
+    branches (1-based, matching `exit_logits_list` order); None scores
+    every branch. Pinning the deployed branch with `p_tar_grid=None`
+    leaves the codec level as the only axis.
 
     Edgent-style adaptation: the plan's fitted per-exit calibrators are
     re-used as-is (no re-fitting); only the offload probability and the
@@ -194,8 +203,21 @@ def rescore_plan(
     accuracy-feasible row with the smallest gap wins (the contract
     degrades as little as possible).
 
-    Returns (new_plan, table): new_plan carries the winning exit_index and
-    p_tar; table lists every candidate as a dict, best first.
+    `compression_levels` adds the payload-codec axis: the candidate table
+    becomes branch x p_tar x level, each row priced at that level's
+    analytic wire bytes (comm term, M/M/1 utilization) and, with labels,
+    at its measured accuracy delta -- offloaded samples score against
+    `final_correct_by_level[level]` (cloud correctness after the payload
+    round-trips the codec; computed here from `final_logits` via the
+    `kernels.ref` oracle when not supplied pre-computed). None (the
+    default) is exactly the legacy level-0-only table, and the level loop
+    is innermost so legacy row order is preserved. The reliability gap is
+    level-independent (the gate runs before the codec), so
+    `max_reliability_gap` bounds every level equally.
+
+    Returns (new_plan, table): new_plan carries the winning exit_index,
+    p_tar, and compression_level; table lists every candidate as a dict,
+    best first.
     """
     from repro.core.partition import expected_latency
 
@@ -215,17 +237,51 @@ def rescore_plan(
             "on-device accuracy"
         )
     grid = [plan.p_tar] if p_tar_grid is None else list(p_tar_grid)
+    levels = (
+        (0,) if compression_levels is None
+        else tuple(int(l) for l in compression_levels)
+    )
     y = None if labels is None else np.asarray(labels)
     final_correct = None
     if final_logits is not None and y is not None:
         final_correct = np.argmax(np.asarray(final_logits), axis=-1) == y
+    # per-level cloud correctness: level 0 is the untouched legacy array
+    fc_by_level: Dict[int, Optional[np.ndarray]] = {0: final_correct}
+    if final_correct_by_level is not None:
+        for l, v in final_correct_by_level.items():
+            fc_by_level.setdefault(int(l), None if v is None else np.asarray(v))
+    for l in levels:
+        if l in fc_by_level:
+            continue
+        if final_logits is not None and y is not None:
+            from repro.kernels.ref import roundtrip_codec_ref
+
+            fc_by_level[l] = (
+                np.argmax(roundtrip_codec_ref(np.asarray(final_logits), l),
+                          axis=-1) == y
+            )
+        else:
+            fc_by_level[l] = None
+    if any(l != 0 for l in levels):
+        from repro.kernels.compress import scaled_payload_nbytes
     w = None
     if sample_weight is not None:
         w = np.asarray(sample_weight, np.float64)
         if w.ndim != 1 or np.any(w < 0) or w.sum() <= 0:
             raise ValueError("sample_weight must be 1-D, non-negative, sum > 0")
+    branch_set = None
+    if branches is not None:
+        branch_set = {int(b) for b in branches}
+        known = set(range(1, len(exit_logits_list) + 1))
+        if not branch_set or not branch_set <= known:
+            raise ValueError(
+                f"branches {sorted(branch_set)} outside the fitted "
+                f"branches {sorted(known)}"
+            )
     table = []
     for i, z in enumerate(exit_logits_list):
+        if branch_set is not None and (i + 1) not in branch_set:
+            continue
         if exit_stats is not None:
             conf, pred = exit_stats[i]
         else:
@@ -235,39 +291,49 @@ def rescore_plan(
         for p in grid:
             on = conf >= p
             offload_prob = float(np.average(~on, weights=w))
-            comm = payload_bytes[i] * 8.0 / uplink_bps
-            utilization = (
-                arrival_rate_hz * offload_prob * comm
-                if arrival_rate_hz is not None
-                else 0.0
-            )
-            wait_factor = 1.0 / max(1.0 - utilization, 1e-2)
-            lat = expected_latency(
-                edge_times_s[i], cloud_times_s[i], payload_bytes[i],
-                offload_prob, uplink_bps, comm_wait_factor=wait_factor,
-            )
-            acc = None
-            if exit_correct is not None and final_correct is not None:
-                acc = float(np.average(np.where(on, exit_correct, final_correct),
-                                       weights=w))
             on_acc = gap = None
             if exit_correct is not None:
                 w_on = None if w is None else w[on]
                 if on.any() and (w_on is None or w_on.sum() > 0):
                     on_acc = float(np.average(exit_correct[on], weights=w_on))
                     gap = abs(on_acc - float(p))
-            table.append(
-                dict(
-                    exit_index=i,
-                    p_tar=float(p),
-                    offload_prob=offload_prob,
-                    expected_latency_s=lat,
-                    uplink_utilization=utilization,
-                    accuracy=acc,
-                    on_device_accuracy=on_acc,
-                    reliability_gap=gap,
+            for lvl in levels:
+                # level 0 keeps the caller's object so legacy pricing is
+                # bit-identical; other levels use the analytic wire size
+                pb = (
+                    payload_bytes[i] if lvl == 0
+                    else scaled_payload_nbytes(payload_bytes[i], lvl)
                 )
-            )
+                comm = pb * 8.0 / uplink_bps
+                utilization = (
+                    arrival_rate_hz * offload_prob * comm
+                    if arrival_rate_hz is not None
+                    else 0.0
+                )
+                wait_factor = 1.0 / max(1.0 - utilization, 1e-2)
+                lat = expected_latency(
+                    edge_times_s[i], cloud_times_s[i], pb,
+                    offload_prob, uplink_bps, comm_wait_factor=wait_factor,
+                )
+                fc = fc_by_level.get(lvl)
+                acc = None
+                if exit_correct is not None and fc is not None:
+                    acc = float(np.average(np.where(on, exit_correct, fc),
+                                           weights=w))
+                table.append(
+                    dict(
+                        exit_index=i,
+                        p_tar=float(p),
+                        compression_level=int(lvl),
+                        offload_prob=offload_prob,
+                        expected_latency_s=lat,
+                        uplink_utilization=utilization,
+                        uplink_nbytes=float(pb) * offload_prob,
+                        accuracy=acc,
+                        on_device_accuracy=on_acc,
+                        reliability_gap=gap,
+                    )
+                )
     best = select_candidate(
         table, min_accuracy=min_accuracy,
         max_reliability_gap=max_reliability_gap,
@@ -279,7 +345,11 @@ def rescore_plan(
         layer = plan.partition_layer
     else:  # exit moved and we don't know its layer: don't keep a stale one
         layer = None
-    new_plan = plan.with_partition(best["exit_index"], layer).with_p_tar(best["p_tar"])
+    new_plan = (
+        plan.with_partition(best["exit_index"], layer)
+        .with_p_tar(best["p_tar"])
+        .with_compression(best.get("compression_level", 0))
+    )
     return new_plan, table
 
 
@@ -336,10 +406,13 @@ def select_candidate(
 
 
 def _row_for(table: List[dict], plan) -> Optional[dict]:
+    level = int(getattr(plan, "compression_level", 0))
     return next(
         (
             r for r in table
-            if r["exit_index"] == plan.exit_index and r["p_tar"] == plan.p_tar
+            if r["exit_index"] == plan.exit_index
+            and r["p_tar"] == plan.p_tar
+            and r.get("compression_level", 0) == level
         ),
         None,
     )
@@ -426,12 +499,18 @@ class ControlConfig:
     interval_s: float = 1.0  # re-score cadence (simulated seconds)
     window_s: float = 2.0  # trailing telemetry window
     p_tar_grid: Optional[Sequence[float]] = None  # None = keep the plan's
+    branches: Optional[Sequence[int]] = None  # physical branches (1-based)
+    # to score; None = every fitted branch. Pinning the branch (and
+    # leaving p_tar_grid=None) isolates the codec axis: the controller
+    # moves ONLY the payload wire format of a fixed split.
     min_accuracy: Optional[float] = None  # accuracy floor for candidates
     max_reliability_gap: Optional[float] = None  # estimated-gap cap
     hysteresis: float = 0.05  # min relative latency gain to switch
     utilization_aware: bool = True  # M/M/1 uplink correction from arrivals
     distress_utilization: float = 0.95  # uplink rho above which a cell may
     # concede p_tar (see `choose_with_concession`)
+    compression_levels: Optional[Sequence[int]] = None  # payload codec
+    # levels to score (None = level 0 only, the bytes-blind legacy table)
 
 
 # ------------------------------------------------------- the controller core
@@ -460,6 +539,7 @@ class ControllerCore:
         labels: Optional[np.ndarray] = None,
         payload_nbytes=None,
         backend=None,
+        compression_levels: Optional[Sequence[int]] = None,
     ):
         from repro.core.bank import PlanBank
         from repro.core.gatepath import get_gate_backend
@@ -543,6 +623,25 @@ class ControllerCore:
         else:
             self._final_cat = None
 
+        # payload-codec axis: measure each non-zero level's accuracy delta
+        # ONCE at construction (cloud correctness after the concatenated
+        # final logits round-trip the codec oracle) so a tick only prices it
+        self.compression_levels = (
+            (0,) if compression_levels is None
+            else tuple(int(l) for l in compression_levels)
+        )
+        self._final_correct_by_level: Optional[Dict[int, np.ndarray]] = None
+        nonzero = [l for l in self.compression_levels if l != 0]
+        if nonzero and self._labels_cat is not None and self._final_cat is not None:
+            from repro.kernels.ref import roundtrip_codec_ref
+
+            self._final_correct_by_level = {
+                l: np.argmax(
+                    roundtrip_codec_ref(self._final_cat, l), axis=-1
+                ) == self._labels_cat
+                for l in nonzero
+            }
+
     @property
     def context_aware(self) -> bool:
         return self.ctx_keys != [None]
@@ -578,10 +677,18 @@ class ControllerCore:
         min_accuracy: Optional[float] = None,
         max_reliability_gap: Optional[float] = None,
         sample_weight=None,
+        compression_levels: Optional[Sequence[int]] = None,
+        branches: Optional[Sequence[int]] = None,
     ) -> Tuple[Any, List[dict]]:
         """One candidate table under measured conditions; `plan` is the
         current deployment (same calibrators as at construction -- the
-        cached exit statistics assume it)."""
+        cached exit statistics assume it). `compression_levels` defaults
+        to the levels fixed at construction (whose accuracy deltas are
+        pre-measured)."""
+        levels = (
+            self.compression_levels if compression_levels is None
+            else tuple(int(l) for l in compression_levels)
+        )
         return rescore_plan(
             plan,
             self.exit_logits_list,
@@ -597,4 +704,7 @@ class ControllerCore:
             arrival_rate_hz=arrival_rate_hz,
             exit_stats=self._exit_stats,
             sample_weight=sample_weight,
+            compression_levels=levels,
+            final_correct_by_level=self._final_correct_by_level,
+            branches=branches,
         )

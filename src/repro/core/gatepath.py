@@ -478,6 +478,12 @@ class GateTable:
                 for k in self.ctx_keys
             ]
         ).astype(np.int64)
+        # retained for the codec's per-level cloud tables (computed lazily
+        # in `cloud_pred` -- a level-0-only run never touches them)
+        self._final_logits = {
+            k: np.asarray(final_logits_by_context[k]) for k in self.ctx_keys
+        }
+        self._final_pred_by_level: Dict[int, np.ndarray] = {0: self.final_pred}
         self.labels = None if labels is None else np.asarray(labels, np.int64)
         self.bank_keys = bank_keys
         # backend-resident views (device arrays for the jax backend) used
@@ -535,8 +541,28 @@ class GateTable:
             np.asarray(p_tar_by_cell, np.float64), n_cells,
         )
 
-    def cloud_pred(self, ctx_ids: np.ndarray, samples: np.ndarray) -> np.ndarray:
-        return self.final_pred[ctx_ids, samples]
+    def cloud_pred(
+        self, ctx_ids: np.ndarray, samples: np.ndarray, level: int = 0
+    ) -> np.ndarray:
+        """Cloud (main-head) predictions for a window. `level` is the
+        payload codec level the offload shipped at: the main head then
+        sees the activation after a codec round-trip, modeled here by
+        round-tripping the stored final logits through the `kernels.ref`
+        oracle (level 0 stays the untouched legacy table)."""
+        level = int(level)
+        if level not in self._final_pred_by_level:
+            from repro.kernels.ref import roundtrip_codec_ref
+
+            self._final_pred_by_level[level] = np.stack(
+                [
+                    np.argmax(
+                        roundtrip_codec_ref(self._final_logits[k], level),
+                        axis=-1,
+                    )
+                    for k in self.ctx_keys
+                ]
+            ).astype(np.int64)
+        return self._final_pred_by_level[level][ctx_ids, samples]
 
     def est_ids(self, ctx_ids: np.ndarray, samples: np.ndarray) -> Optional[np.ndarray]:
         """Estimator verdicts (indices into `bank_keys`, -1 unknown) for a

@@ -45,6 +45,7 @@ class OffloadPlan:
     entropy_threshold: Optional[float] = None
     exit_index: int = 0  # deployed exit: which calibrator single-branch paths use
     partition_layer: Optional[int] = None  # model layer of the split, if chosen
+    compression_level: int = 0  # payload codec level (0 = raw float32)
     metadata: Dict[str, Any] = field(default_factory=dict)
 
     @property
@@ -131,6 +132,7 @@ class OffloadPlan:
             entropy_threshold=self.entropy_threshold,
             exit_index=self.exit_index,
             partition_layer=self.partition_layer,
+            compression_level=self.compression_level,
             metadata=dict(self.metadata),
         )
         kw.update(overrides)
@@ -146,6 +148,12 @@ class OffloadPlan:
         gate without re-fitting."""
         return self._copy(p_tar=float(p_tar))
 
+    def with_compression(self, level: int) -> "OffloadPlan":
+        """New plan with a different payload codec level (see
+        `repro.kernels.compress.LEVELS`; 0 ships the raw float32
+        activation, the paper's pricing)."""
+        return self._copy(compression_level=int(level))
+
     # ------------------------------------------------------ serialization
     def to_dict(self) -> dict:
         return {
@@ -160,6 +168,7 @@ class OffloadPlan:
             "partition_layer": (
                 None if self.partition_layer is None else int(self.partition_layer)
             ),
+            "compression_level": int(self.compression_level),
             "metadata": self.metadata,
         }
 
@@ -176,6 +185,7 @@ class OffloadPlan:
             entropy_threshold=d.get("entropy_threshold"),
             exit_index=d.get("exit_index", 0),
             partition_layer=d.get("partition_layer"),
+            compression_level=d.get("compression_level", 0),
             metadata=d.get("metadata", {}),
         )
 

@@ -551,10 +551,13 @@ class CompiledFleetSimulator(FleetSimulator):
         ws = cfg.window_s
         C = topo.n_cells
         n_windows = int(math.ceil(max(topo.horizon_s, 0.0) / ws)) + 1
-        branch, p_tar = self._initial_state
+        branch, p_tar, clevel = self._initial_state
         s_edge = L.edge_time(self.profile, branch)
         s_cloud = L.cloud_time(self.profile, branch)
-        nbytes = float(self.payload_nbytes(branch))
+        # the static deployment fixes (branch, level), so the device-resident
+        # (branch, level) -> bytes table collapses to one scalar; level 0
+        # reuses the raw tensor bytes unchanged (bit-exact legacy pricing)
+        nbytes = float(self._payload_nbytes_for(branch, clevel))
         comm_bh = nbytes * 8.0 / self.profile.uplink_bps
 
         # ---- churn pre-pass: activation is pure time-based, so the
@@ -718,7 +721,8 @@ class CompiledFleetSimulator(FleetSimulator):
         )
         pred = table.pred[:, bi, :][out["ctx"], lane["smp"]]
         cpredA = table.cloud_pred(out["ctx"].ravel(),
-                                  lane["smp"].ravel()).reshape(C, R)
+                                  lane["smp"].ravel(),
+                                  level=clevel).reshape(C, R)
         ce = table.correct(lane["smp"].ravel(), pred.ravel())
         cc = table.correct(lane["smp"].ravel(), cpredA.ravel())
         # EDGE-branch correctness, kept separately from the cloud-patched
@@ -732,7 +736,8 @@ class CompiledFleetSimulator(FleetSimulator):
             ).astype(np.int8)
         completeA = np.where(out["on"], out["edge_done"], out["cloud"])
         cpredB = table.cloud_pred(out["ctx_bh"].ravel(),
-                                  bh["smp"].ravel()).reshape(C, RB)
+                                  bh["smp"].ravel(),
+                                  level=clevel).reshape(C, RB)
         ccB = table.correct(bh["smp"].ravel(), cpredB.ravel())
         correctB = (
             np.full((C, RB), -1, np.int8) if ccB is None
@@ -745,11 +750,11 @@ class CompiledFleetSimulator(FleetSimulator):
 
         if orch is None and not obs_on and not has_shed:
             self._flush_fast(tel, lane, out, estA, correctA, completeA,
-                             rowsA, deadlines, branch, p_tar, nbytes)
+                             rowsA, deadlines, branch, p_tar, clevel, nbytes)
         else:
             self._replay(tel, lane, bh, out, estA, correctA, completeA,
                          correctB, by_window, n_windows, ws, deadlines,
-                         branch, p_tar, nbytes, orch)
+                         branch, p_tar, clevel, nbytes, orch)
         if orch is not None:
             orch.finish(self, tel, n_windows * ws)
         return tel
@@ -762,7 +767,7 @@ class CompiledFleetSimulator(FleetSimulator):
         )
 
     def _flush_fast(self, tel, lane, out, estA, correctA, completeA,
-                    rowsA, deadlines, branch, p_tar, nbytes):
+                    rowsA, deadlines, branch, p_tar, clevel, nbytes):
         """No churn, no orchestrator, no obs: flush whole per-cell columns.
 
         Chunking telemetry per cell instead of per (window, cell) batch is
@@ -801,10 +806,13 @@ class CompiledFleetSimulator(FleetSimulator):
                 c, latency_s=lat, on_device=on, correct=correctA[sl],
                 p_tar=np.full(n, p_tar), branch=np.full(n, branch, np.int64),
                 ctx_id=ctx, est_id=est, missed=missed,
+                energy_j=self._energy_col(
+                    L.edge_time(self.profile, branch), on, branch, clevel
+                ),
             )
 
     def _batch_cols(self, b, lane, bh, out, estA, correctA, completeA,
-                    correctB, deadlines, branch, p_tar):
+                    correctB, deadlines, branch, p_tar, clevel):
         n = b.hi - b.lo
         if b.serve >= 0:
             sl = (b.serve, slice(b.row0, b.row0 + n))
@@ -819,6 +827,11 @@ class CompiledFleetSimulator(FleetSimulator):
                 "correct": correctA[sl],
                 "branch": np.full(n, branch, np.int64),
                 "p_tar": np.full(n, p_tar),
+                "clevel": np.full(n, int(clevel), np.int64),
+                "energy_j": self._energy_col(
+                    L.edge_time(self.profile, branch), out["on"][sl],
+                    branch, int(clevel),
+                ),
                 "deadline": deadlines[b.origin],
             }
             # cols["correct"] above is already cloud-patched; the live
@@ -852,6 +865,9 @@ class CompiledFleetSimulator(FleetSimulator):
             "correct": correctB[sl],
             "branch": np.full(n, branch, np.int64),
             "p_tar": np.full(n, p_tar),
+            "clevel": np.full(n, int(clevel), np.int64),
+            "energy_j": self._energy_col(0.0, np.zeros(n, bool), branch,
+                                         int(clevel)),
             "deadline": deadlines[b.origin],
         }
         cols["edge_correct"] = np.full(n, -1, np.int8)
@@ -868,7 +884,7 @@ class CompiledFleetSimulator(FleetSimulator):
 
     def _replay(self, tel, lane, bh, out, estA, correctA, completeA,
                 correctB, by_window, n_windows, ws, deadlines, branch,
-                p_tar, nbytes, orch):
+                p_tar, clevel, nbytes, orch):
         """Replay the host simulator's boundary bookkeeping from the
         device-solved columns, operation-for-operation in its order:
         live-cloud pops, orchestrator hooks (churn audit + QoS monitor),
@@ -887,7 +903,7 @@ class CompiledFleetSimulator(FleetSimulator):
                 n = b.hi - b.lo
                 cols, comm, s_eff = self._batch_cols(
                     b, lane, bh, out, estA, correctA, completeA, correctB,
-                    deadlines, branch, p_tar,
+                    deadlines, branch, p_tar, clevel,
                 )
                 if bool(self._active[b.origin]) == b.shed:
                     # pragma: no cover - internal consistency
@@ -938,6 +954,11 @@ class CompiledFleetSimulator(FleetSimulator):
                         np.argsort(cols["edge_done"][off], kind="stable")
                     ]
                     t_ready = cols["edge_done"][pos]
+                    if self._metrics is not None:
+                        # uplink AND backhaul payloads count, attributed
+                        # to the origin cell (host simulator's rule)
+                        self._metrics.inc("fleet_uplink_bytes_total",
+                                          nbytes * len(pos), cell=b.origin)
                     if b.serve >= 0:
                         tel.observe_bandwidth(
                             b.serve, t_ready, nbytes * 8.0 / comm[pos]

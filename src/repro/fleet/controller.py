@@ -84,16 +84,18 @@ class FleetController:
         config: Optional[FleetControllerConfig] = None,
         payload_nbytes=None,
     ):
+        cfg = config or FleetControllerConfig()
         self.core = ControllerCore(
             plan, profile, exit_logits,
             final_logits=final_logits, labels=labels,
             payload_nbytes=payload_nbytes,
+            compression_levels=cfg.compression_levels,
         )
         self.plan = self.core.plan
         self.profile = profile
         self.n_cells = n_cells
         self.cloud_servers = cloud_servers
-        self.config = config or FleetControllerConfig()
+        self.config = cfg
         if (
             self.config.p_tar_grid is not None
             and self.plan.p_tar not in self.config.p_tar_grid
@@ -106,11 +108,11 @@ class FleetController:
                    "p_tar_grid": tuple(self.config.p_tar_grid)
                    + (self.plan.p_tar,)}
             )
-        self.history: List[Tuple[float, List[Tuple[int, float]]]] = []
+        self.history: List[Tuple[float, List[Tuple[int, float, int]]]] = []
         #: optional repro.obs.AuditLog (injected by `run_fleet(obs=...)` /
         #: FleetSimulator); records per-cell rescore evidence + decisions
         self.audit = None
-        self._last_decisions: Optional[List[Tuple[int, float]]] = None
+        self._last_decisions: Optional[List[Tuple[int, float, int]]] = None
 
     @property
     def branches(self) -> List[int]:
@@ -137,8 +139,9 @@ class FleetController:
 
     def update(
         self, t: float, telemetry, active=None, distressed=None
-    ) -> List[Tuple[int, float]]:
-        """-> per-cell (physical branch, p_tar) decisions.
+    ) -> List[Tuple[int, float, int]]:
+        """-> per-cell (physical branch, p_tar, compression_level)
+        decisions.
 
         `active` (orchestrated runs): a (C,) bool mask; a DOWN cell is not
         re-scored -- its telemetry window mixes its own last traffic with
@@ -175,6 +178,7 @@ class FleetController:
                 uplink_bps=bw,
                 arrival_rate_hz=rate_hz,
                 p_tar_grid=cfg.p_tar_grid,
+                branches=cfg.branches,
                 min_accuracy=cfg.min_accuracy,
                 max_reliability_gap=cfg.max_reliability_gap,
                 sample_weight=self.core.sample_weight_for_mix(
@@ -200,9 +204,15 @@ class FleetController:
         if cfg.cloud_rho_max is not None:
             chosen_rows = self._shared_cloud_pass(chosen_rows, tables, rates)
 
-        hold = (self.plan.exit_index + 1, float(self.plan.p_tar))
+        hold = (
+            self.plan.exit_index + 1,
+            float(self.plan.p_tar),
+            int(getattr(self.plan, "compression_level", 0)),
+        )
         decisions = [
-            hold if r is None else (r["exit_index"] + 1, float(r["p_tar"]))
+            hold if r is None
+            else (r["exit_index"] + 1, float(r["p_tar"]),
+                  int(r.get("compression_level", 0)))
             for r in chosen_rows
         ]
         if self.audit is not None:
@@ -222,7 +232,8 @@ class FleetController:
             changed = prev is None or prev[c] != d
             if not (changed or inp["distressed"]):
                 continue
-            chosen = {"branch": int(d[0]), "p_tar": float(d[1])}
+            chosen = {"branch": int(d[0]), "p_tar": float(d[1]),
+                      "compression_level": int(d[2])}
             if row is not None:
                 chosen.update(
                     offload_prob=float(row["offload_prob"]),

@@ -248,8 +248,10 @@ class FleetSimulator:
                 f"plan deploys branch {branch} but the table only serves "
                 f"{table.branches}"
             )
-        self._initial_state = (branch, float(plan.p_tar))
-        self._state: List[Tuple[int, float]] = []
+        self._initial_state = (
+            branch, float(plan.p_tar), int(getattr(plan, "compression_level", 0))
+        )
+        self._state: List[Tuple[int, float, int]] = []
         # estimator verdicts (bank key indices) -> table context ids, for
         # the context-mix telemetry the controller windows
         self._bank_to_table = np.asarray(
@@ -327,6 +329,28 @@ class FleetSimulator:
         t = self._cell_tables[cell]
         return self.table if t is None else t
 
+    def _payload_nbytes_for(self, branch: int, level: int) -> int:
+        """Wire bytes for one offload from `branch` at codec `level`: the
+        caller-supplied raw table untouched at level 0 (bit-exact legacy
+        pricing), the codec's analytic size otherwise."""
+        raw = self.payload_nbytes(branch)
+        if level == 0:
+            return raw
+        from repro.kernels.compress import scaled_payload_nbytes
+
+        return scaled_payload_nbytes(raw, level)
+
+    def _energy_col(self, edge_time_s, on_device, branch, level) -> np.ndarray:
+        """Per-request edge-side energy column: compute J for every gated
+        request plus radio J for the offloaded payload's wire bytes (see
+        `repro.offload.latency.energy_per_request_j`)."""
+        compute_j = edge_time_s * self.profile.edge_power_w
+        radio_j = (
+            float(self._payload_nbytes_for(branch, level)) * 8.0
+            * self.profile.uplink_j_per_bit
+        )
+        return np.where(on_device, compute_j, compute_j + radio_j)
+
     def _cloud_scale_at(self, times: np.ndarray) -> np.ndarray:
         scale = np.ones(len(times))
         for a, b, f in self.config.cloud_slowdowns:
@@ -384,9 +408,9 @@ class FleetSimulator:
                 if hi == lo:
                     continue
                 if self._active[c]:
-                    branch, p_tar = self._state[c]
+                    branch, p_tar, clevel = self._state[c]
                     cols = self._edge_and_gate(
-                        c, cell, lo, hi, branch, p_tar, dev_free[c]
+                        c, cell, lo, hi, branch, p_tar, clevel, dev_free[c]
                     )
                     serve_c = c
                 else:
@@ -414,7 +438,15 @@ class FleetSimulator:
                     order = np.argsort(cols["edge_done"][off], kind="stable")
                     pos = np.flatnonzero(off)[order]
                     t_ready = cols["edge_done"][pos]
-                    nbytes = float(self.payload_nbytes(branch))
+                    nbytes = float(self._payload_nbytes_for(
+                        branch, int(cols["clevel"][0])
+                    ))
+                    if self._metrics is not None:
+                        # uplink AND backhaul payloads count: both cross a
+                        # link toward the cloud, attributed to the origin
+                        # cell (matching the trace records' `cell`)
+                        self._metrics.inc("fleet_uplink_bytes_total",
+                                          nbytes * len(pos), cell=c)
                     if serve_c >= 0:
                         net = topo.cells[serve_c].network
                         rates = net.rates_bps(t_ready)
@@ -508,11 +540,11 @@ class FleetSimulator:
             )
 
     # ---------------------------------------------------------- edge tier
-    def _edge_and_gate(self, c, cell, lo, hi, branch, p_tar, dev_free):
+    def _edge_and_gate(self, c, cell, lo, hi, branch, p_tar, clevel, dev_free):
         wl = cell.workload
         return self._serve_cols(
             c, wl.arrival_s[lo:hi], wl.sample[lo:hi], wl.device[lo:hi],
-            cell.n_devices, branch, p_tar, dev_free,
+            cell.n_devices, branch, p_tar, clevel, dev_free,
             ctx_cell=c, deadline_s=cell.deadline_s,
         )
 
@@ -525,7 +557,7 @@ class FleetSimulator:
         ]
 
     def _serve_cols(self, serve_c, arr, samples, devices, n_devices,
-                    branch, p_tar, dev_free, ctx_cell, deadline_s):
+                    branch, p_tar, clevel, dev_free, ctx_cell, deadline_s):
         """Serve one window's columns on cell `serve_c`'s devices and gate
         table, under cell `ctx_cell`'s context regime (they differ only
         when a dead cell's load was shed here)."""
@@ -569,6 +601,10 @@ class FleetSimulator:
             ),
             "branch": np.full(n, branch, np.int64),
             "p_tar": np.full(n, p_tar),
+            "clevel": np.full(n, int(clevel), np.int64),
+            "energy_j": self._energy_col(
+                L.edge_time(self.profile, branch), on, branch, int(clevel)
+            ),
             "deadline": deadline_s,
         }
         if self._tracing:
@@ -613,11 +649,11 @@ class FleetSimulator:
         for s in self.topology.shed_order(c):
             if self._active[s]:
                 host = self.topology.cells[int(s)]
-                branch, p_tar = self._state[int(s)]
+                branch, p_tar, clevel = self._state[int(s)]
                 cols = self._serve_cols(
                     int(s), arr, samples,
                     wl.device[lo:hi] % host.n_devices, host.n_devices,
-                    branch, p_tar, dev_free[int(s)],
+                    branch, p_tar, clevel, dev_free[int(s)],
                     ctx_cell=c, deadline_s=cell.deadline_s,
                 )
                 tel.observe_shed_arrivals(int(s), arr)
@@ -635,7 +671,7 @@ class FleetSimulator:
             # no gate ran: count the window so sketch totals still match
             # the fleet_requests_total counter
             self._cal.note_ungated(c, n)
-        branch, p_tar = self._state[c]
+        branch, p_tar, clevel = self._state[c]
         cols = {
             "arrival": arr,
             "samples": samples,
@@ -647,6 +683,10 @@ class FleetSimulator:
             "correct": np.full(n, -1, np.int8),
             "branch": np.full(n, branch, np.int64),
             "p_tar": np.full(n, p_tar),
+            "clevel": np.full(n, int(clevel), np.int64),
+            # no edge service ran on a backhauled window: radio J only
+            "energy_j": self._energy_col(0.0, np.zeros(n, bool), branch,
+                                         int(clevel)),
             "deadline": cell.deadline_s,
         }
         if self._tracing:
@@ -681,8 +721,11 @@ class FleetSimulator:
             table = self._table_for(cell_of_w)
             pos = pos_of[m]
             cols["complete"][pos] = done[m]
+            # the deployed codec level is constant within a window, so the
+            # per-level main-head table resolves once per window
             cpred = table.cloud_pred(cols["ctx_id"][pos],
-                                     cols["samples"][pos])
+                                     cols["samples"][pos],
+                                     level=int(cols["clevel"][0]))
             correct = table.correct(cols["samples"][pos], cpred)
             if correct is not None:
                 cols["correct"][pos] = correct.astype(np.int8)
@@ -704,6 +747,7 @@ class FleetSimulator:
                 ctx_id=cols["ctx_id"],
                 est_id=cols["est_id"],
                 missed=missed,
+                energy_j=cols["energy_j"],
             )
 
     # ------------------------------------------------------- observability
@@ -756,6 +800,8 @@ class FleetSimulator:
             backhaul = int(cols["serve_cell"]) < 0
             branch = int(cols["branch"][0])
             s_edge = 0.0 if backhaul else L.edge_time(self.profile, branch)
+            clevel = int(cols["clevel"][0])
+            pn_off = float(self._payload_nbytes_for(branch, clevel))
             for i in range((-counter) % every, n, every):
                 arrival = float(cols["arrival"][i])
                 edge_done = float(cols["edge_done"][i])
@@ -795,9 +841,12 @@ class FleetSimulator:
                         # what the calibration sketch accumulated
                         "correct": None if ec < 0 else ec,
                     }
+                    if not on:
+                        gate["compression_level"] = clevel
                 sink.emit(request_record(
                     "fleet", counter + i, arrival, complete, on, spans,
                     gate=gate, cell=c,
+                    payload_nbytes=None if on else pn_off,
                 ))
                 emitted += 1
             counter += n
@@ -825,7 +874,16 @@ class FleetSimulator:
                 f"controller returned {len(decisions)} decisions for "
                 f"{self.topology.n_cells} cells"
             )
-        for c, (branch, p_tar) in enumerate(decisions):
-            if (branch, p_tar) != self._state[c]:
-                tel.record_controller(t, c, branch, float(p_tar))
-            self._state[c] = (int(branch), float(p_tar))
+        for c, dec in enumerate(decisions):
+            # legacy controllers return (branch, p_tar) 2-tuples; the
+            # compression-aware fleet controller appends the codec level
+            if len(dec) == 2:
+                branch, p_tar = dec
+                level = 0
+            else:
+                branch, p_tar, level = dec
+            state = (int(branch), float(p_tar), int(level))
+            if state != self._state[c]:
+                tel.record_controller(t, c, branch, float(p_tar),
+                                      level=int(level))
+            self._state[c] = state

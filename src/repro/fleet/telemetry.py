@@ -67,7 +67,7 @@ class _CellColumns:
     """Append-only per-cell columns; concatenated lazily on first read."""
 
     FIELDS = ("latency_s", "on_device", "correct", "p_tar", "branch",
-              "ctx_id", "est_id", "missed")
+              "ctx_id", "est_id", "missed", "energy_j")
 
     def __init__(self):
         self.chunks: Dict[str, List[np.ndarray]] = {f: [] for f in self.FIELDS}
@@ -113,7 +113,8 @@ class FleetTelemetry:
         # the edge-side context verdicts a context-aware controller windows
         self._ctx = [_Observations(np.int64) for _ in range(n_cells)]
         self._arrivals: List[np.ndarray] = [np.empty(0)] * n_cells
-        self.controller_events: List[Tuple[float, int, int, float]] = []  # (t, cell, branch, p_tar)
+        # (t, cell, branch, p_tar, compression_level) per adopted switch
+        self.controller_events: List[Tuple[float, int, int, float, int]] = []
         # live QoS streams (orchestrated runs only): per-cell lockstep
         # (t, latency) + (t, missed) and (t, correct) + (t, p_tar) pairs,
         # fed from resolved completions DURING the run so a QoS monitor
@@ -156,8 +157,10 @@ class FleetTelemetry:
         path, true contexts in oracle mode."""
         self._ctx[cell].append(times, ctx_ids)
 
-    def record_controller(self, t: float, cell: int, branch: int, p_tar: float) -> None:
-        self.controller_events.append((t, cell, branch, p_tar))
+    def record_controller(
+        self, t: float, cell: int, branch: int, p_tar: float, level: int = 0
+    ) -> None:
+        self.controller_events.append((t, cell, branch, p_tar, int(level)))
 
     def observe_live_latency(
         self, cell: int, times: np.ndarray, latency_s: np.ndarray,
@@ -328,8 +331,11 @@ class FleetTelemetry:
         if lat.shape[0] == 0:
             nan = float("nan")
             out.update(offload_rate=nan, deadline_miss_rate=nan, accuracy=nan,
-                       miscalibration_gap=nan)
+                       miscalibration_gap=nan, energy_j_total=0.0)
             return out
+        out["energy_j_total"] = float(
+            sum(c.column("energy_j").sum() for c in cells)
+        )
         on = np.concatenate([c.column("on_device") for c in cells])
         correct = np.concatenate([c.column("correct") for c in cells])
         missed = np.concatenate([c.column("missed") for c in cells])

@@ -1,0 +1,257 @@
+"""Pallas bottleneck codec for the offload payload (encode on the edge,
+decode in the cloud).
+
+The paper prices every offload as the raw float32 intermediate activation
+crossing the 18.8 Mbps uplink; this kernel makes the payload a control
+knob. Per (row, 128-feature tile) of the flattened activation it computes
+an absmax scale and quantizes to signed int8 (level 1) or int4 (level 2),
+packing values little-endian into uint32 words with the float32 scales
+emitted in the same pass -- one HBM read of the activation produces the
+whole wire image, which is what makes the encode affordable on the edge
+hot path (the activation is re-read zero extra times).
+
+Wire format (shared bit-exactly with the numpy oracle in `ref.py`):
+
+    words  (rows, padded_features * bits / 32) uint32, little-endian
+           packed two's-complement `bits`-bit values
+    scales (rows, padded_features / 128)       float32, absmax / qmax
+
+Compressed size is analytic -- `compressed_nbytes(n, level)` = n*bits/8
+payload + 4 bytes per 128-wide scale group -- so the control plane can
+price a (branch, level) candidate without touching a tensor; level 2
+(int4) lands at ~7.5x under the float32 payload, level 1 (int8) at ~3.9x.
+
+Edge cases: non-finite inputs are zeroed before the absmax (one inf
+would otherwise flush its whole tile to zeros with an inf scale), and an
+all-zero tile stores scale 0 but divides by 1, so encode never divides
+by zero. Level 0 is the identity and never reaches these kernels.
+
+Tiling: rows block 8 (fp32 sublane) x features block 512 lanes; every
+(8, 512) block owns four whole scale groups, so the grid is fully
+parallel (no cross-tile carry, unlike the online-softmax gate kernel).
+The group reshape (8, 512) -> (8, 4, 128) stays within the lane axis.
+`interpret=True` executes on CPU for validation; ops-level wrappers pass
+`interpret=not _is_tpu()` exactly as `ops.exit_gate` does.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as _np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import CODEC_BITS, CODEC_TILE, _codec_layout
+
+# renamed TPUCompilerParams -> CompilerParams in newer jax
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+#: the codec's public level axis: 0 = identity float32, 1 = int8, 2 = int4
+LEVELS = (0, 1, 2)
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def compressed_nbytes(n_elements: int, level: int) -> int:
+    """Wire bytes for an n-element float32 payload at `level` (analytic,
+    unpadded): packed values + one float32 scale per 128-element group.
+    The single source of truth every pricing surface derives from."""
+    n = int(n_elements)
+    if int(level) == 0:
+        return 4 * n
+    bits = CODEC_BITS[int(level)]
+    groups = -(-n // CODEC_TILE)
+    return (n * bits + 7) // 8 + 4 * groups
+
+
+def scaled_payload_nbytes(raw_nbytes: int, level: int) -> int:
+    """Wire bytes for a payload whose RAW float32 size is `raw_nbytes` --
+    the (branch, level) table entry. Level 0 returns `raw_nbytes`
+    unchanged (the bit-exact identity the parity suites pin)."""
+    if int(level) == 0:
+        return int(raw_nbytes)
+    return compressed_nbytes(int(raw_nbytes) // 4, level)
+
+
+# ---------------------------------------------------------------- kernels
+def _encode_kernel(x_ref, words_ref, scale_ref, *, bits: int):
+    per = 32 // bits
+    qmax = jnp.float32((1 << (bits - 1)) - 1)
+    mask = jnp.uint32((1 << bits) - 1)
+    z = x_ref[:].astype(jnp.float32)  # (R, C)
+    z = jnp.where(jnp.isfinite(z), z, jnp.float32(0.0))
+    R, C = z.shape
+    g = C // CODEC_TILE
+    zt = z.reshape(R, g, CODEC_TILE)
+    # reciprocal-multiply, matching ref.encode_codec_ref bit-for-bit
+    scale = jnp.max(jnp.abs(zt), axis=2) * jnp.float32(_np.float32(1.0) / _np.float32((1 << (bits - 1)) - 1))
+    safe = jnp.where(scale > 0, scale, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(zt / safe[:, :, None]), -qmax, qmax)
+    q = q.astype(jnp.int32).reshape(R, C // per, per)
+    w = jnp.zeros((R, C // per), jnp.uint32)
+    for k in range(per):  # static unroll: 4 (int8) or 8 (int4) ors
+        w = w | ((q[:, :, k].astype(jnp.uint32) & mask) << jnp.uint32(bits * k))
+    words_ref[:] = w
+    scale_ref[:] = scale
+
+
+def _decode_kernel(words_ref, scale_ref, out_ref, *, bits: int):
+    per = 32 // bits
+    half, full = 1 << (bits - 1), 1 << bits
+    mask = jnp.uint32(full - 1)
+    w = words_ref[:]  # (R, C // per) uint32
+    vs = []
+    for k in range(per):
+        u = ((w >> jnp.uint32(bits * k)) & mask).astype(jnp.int32)
+        vs.append(jnp.where(u >= half, u - full, u))
+    R, nw = w.shape
+    v = jnp.stack(vs, axis=-1).reshape(R, nw * per)
+    zt = v.reshape(R, -1, CODEC_TILE).astype(jnp.float32)
+    out_ref[:] = (zt * scale_ref[:][:, :, None]).reshape(R, nw * per)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "block_rows", "block_cols", "interpret")
+)
+def encode_pallas(
+    z, bits: int, block_rows: int = 8, block_cols: int = 512,
+    interpret: bool = True,
+):
+    """z: (rows, cols) float32, rows % block_rows == 0, cols % block_cols
+    == 0. Returns (words uint32, scales float32) covering all of z."""
+    rows, cols = z.shape
+    assert rows % block_rows == 0 and cols % block_cols == 0
+    per = 32 // bits
+    grid = (rows // block_rows, cols // block_cols)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, block_cols // per), lambda i, j: (i, j)),
+            pl.BlockSpec(
+                (block_rows, block_cols // CODEC_TILE), lambda i, j: (i, j)
+            ),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, cols // per), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, cols // CODEC_TILE), jnp.float32),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(z)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "block_rows", "block_cols", "interpret")
+)
+def decode_pallas(
+    words, scales, bits: int, block_rows: int = 8, block_cols: int = 512,
+    interpret: bool = True,
+):
+    """Inverse of `encode_pallas`; returns (rows, cols) float32."""
+    per = 32 // bits
+    rows, nw = words.shape
+    cols = nw * per
+    assert rows % block_rows == 0 and cols % block_cols == 0
+    grid = (rows // block_rows, cols // block_cols)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols // per), lambda i, j: (i, j)),
+            pl.BlockSpec(
+                (block_rows, block_cols // CODEC_TILE), lambda i, j: (i, j)
+            ),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(words, scales)
+
+
+# ----------------------------------------------------------- public wrappers
+@dataclass(frozen=True)
+class EncodedPayload:
+    """One encoded offload payload: the wire image + enough metadata to
+    decode. `nbytes` is the analytic unpadded wire size (what the uplink
+    is charged), not the padded device buffer size."""
+
+    words: Any  # (rows, ceil(features/128)*128 * bits / 32) uint32
+    scales: Any  # (rows, ceil(features/128)) float32
+    shape: Tuple[int, ...]
+    level: int
+
+    @property
+    def nbytes(self) -> int:
+        rows, cols = _codec_layout(self.shape)
+        return rows * compressed_nbytes(cols, self.level)
+
+
+def encode(x, level: int, block_rows: int = 8, block_cols: int = 512) -> EncodedPayload:
+    """Encode an arbitrary-shape float payload through the Pallas kernel
+    (interpret mode off-TPU). The emitted words/scales are sliced to the
+    128-aligned wire format of `ref.encode_codec_ref`, bit-exactly."""
+    level = int(level)
+    if level == 0:
+        raise ValueError("level 0 is the identity; nothing to encode")
+    bits = CODEC_BITS[level]
+    per = 32 // bits
+    x = jnp.asarray(x)
+    rows, cols = _codec_layout(x.shape)
+    z = x.reshape(rows, cols).astype(jnp.float32)
+    cols128 = -(-cols // CODEC_TILE) * CODEC_TILE
+    pr = (-rows) % block_rows
+    pc = (-cols) % block_cols
+    if pr or pc:
+        z = jnp.pad(z, ((0, pr), (0, pc)))
+    words, scales = encode_pallas(
+        z, bits, block_rows=block_rows, block_cols=block_cols,
+        interpret=not _is_tpu(),
+    )
+    return EncodedPayload(
+        words=words[:rows, : cols128 * bits // 32],
+        scales=scales[:rows, : cols128 // CODEC_TILE],
+        shape=tuple(int(d) for d in x.shape),
+        level=level,
+    )
+
+
+def decode(enc: EncodedPayload, block_rows: int = 8, block_cols: int = 512):
+    """Decode an `EncodedPayload` back to float32 in its original shape."""
+    bits = CODEC_BITS[int(enc.level)]
+    per = 32 // bits
+    rows, cols = _codec_layout(enc.shape)
+    words = jnp.asarray(enc.words)
+    scales = jnp.asarray(enc.scales)
+    nw, ng = words.shape[1], scales.shape[1]
+    pr = (-rows) % block_rows
+    pw = (-(nw * per)) % block_cols
+    if pr or pw:
+        words = jnp.pad(words, ((0, pr), (0, pw // per)))
+        scales = jnp.pad(scales, ((0, pr), (0, pw // CODEC_TILE)))
+    out = decode_pallas(
+        words, scales, bits, block_rows=block_rows, block_cols=block_cols,
+        interpret=not _is_tpu(),
+    )
+    return out[:rows, :cols].reshape(enc.shape)
+
+
+def roundtrip(x, level: int):
+    """decode(encode(x)) through the kernels; level 0 is the identity."""
+    if int(level) == 0:
+        return jnp.asarray(x)
+    return decode(encode(x, level))

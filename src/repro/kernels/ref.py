@@ -1,8 +1,9 @@
-"""Pure-jnp oracles for every kernel in this package."""
+"""Pure-jnp/numpy oracles for every kernel in this package."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def exit_gate_ref(logits, temperature):
@@ -18,6 +19,97 @@ def exit_gate_ref(logits, temperature):
     ent = -jnp.sum(p * logp, axis=-1)
     idx = jnp.argmax(z, axis=-1).astype(jnp.int32)
     return conf, ent, idx
+
+
+# ------------------------------------------------- bottleneck codec oracle
+#: elements per scale group -- one float32 scale per TILE consecutive
+#: features of a sample's flattened payload (the TPU lane width, so the
+#: kernel's (8, TILE) block owns whole scale groups)
+CODEC_TILE = 128
+#: level -> integer bits per quantized value (level 0 is identity and
+#: never reaches the codec)
+CODEC_BITS = {1: 8, 2: 4}
+
+
+def _codec_layout(shape):
+    """Canonical 2D view: one row per leading-axis sample, features
+    flattened into columns (the per-sample vector the tiles run over)."""
+    if len(shape) <= 1:
+        return 1, int(shape[0]) if shape else 1
+    rows = int(shape[0])
+    cols = 1
+    for d in shape[1:]:
+        cols *= int(d)
+    return rows, cols
+
+
+def encode_codec_ref(x, level: int):
+    """Absmax per-tile quantize + pack, the bit-exact oracle for the
+    Pallas encode kernel.
+
+    x: any-shape float array, canonicalized to (rows, features). Per
+    (row, TILE-feature group): scale = absmax/qmax (float32), values
+    round-to-nearest-even to `CODEC_BITS[level]`-bit signed ints packed
+    little-endian into uint32 words. Non-finite inputs are zeroed before
+    absmax (an inf scale would silently flush the whole tile); an
+    all-zero tile stores scale 0 and divides by 1 instead.
+
+    Returns (words, scales): words (rows, padded_features * bits / 32)
+    uint32, scales (rows, padded_features / TILE) float32.
+    """
+    bits = CODEC_BITS[int(level)]
+    per = 32 // bits
+    qmax = np.float32((1 << (bits - 1)) - 1)
+    x = np.asarray(x)
+    rows, cols = _codec_layout(x.shape)
+    z = x.reshape(rows, cols).astype(np.float32)
+    pad = (-cols) % CODEC_TILE
+    if pad:
+        z = np.concatenate([z, np.zeros((rows, pad), np.float32)], axis=1)
+    z = np.where(np.isfinite(z), z, np.float32(0.0))
+    g = z.shape[1] // CODEC_TILE
+    zt = z.reshape(rows, g, CODEC_TILE)
+    # multiply by the f32 reciprocal instead of dividing: a compiler may
+    # strength-reduce a constant divide to exactly this, so doing it
+    # explicitly keeps the oracle and the kernel bit-identical
+    scales = (np.max(np.abs(zt), axis=2) * (np.float32(1.0) / qmax)).astype(np.float32)
+    safe = np.where(scales > 0, scales, np.float32(1.0))
+    q = np.clip(np.round(zt / safe[:, :, None]), -qmax, qmax).astype(np.int32)
+    qf = q.reshape(rows, g * CODEC_TILE)
+    mask = np.uint32((1 << bits) - 1)
+    words = np.zeros((rows, qf.shape[1] // per), np.uint32)
+    for k in range(per):
+        words |= (qf[:, k::per].astype(np.uint32) & mask) << np.uint32(bits * k)
+    return words, scales
+
+
+def decode_codec_ref(words, scales, shape, level: int):
+    """Inverse of `encode_codec_ref`: unpack, sign-extend, rescale.
+    Returns float32 in the original `shape`."""
+    bits = CODEC_BITS[int(level)]
+    per = 32 // bits
+    half, full = 1 << (bits - 1), 1 << bits
+    mask = np.uint32(full - 1)
+    words = np.asarray(words, np.uint32)
+    scales = np.asarray(scales, np.float32)
+    rows, nw = words.shape
+    v = np.empty((rows, nw * per), np.int32)
+    for k in range(per):
+        u = ((words >> np.uint32(bits * k)) & mask).astype(np.int32)
+        v[:, k::per] = np.where(u >= half, u - full, u)
+    zt = v.reshape(rows, -1, CODEC_TILE).astype(np.float32) * scales[:, :, None]
+    _, cols = _codec_layout(shape)
+    return zt.reshape(rows, -1)[:, :cols].reshape(shape)
+
+
+def roundtrip_codec_ref(x, level: int):
+    """decode(encode(x)) -- what the cloud sees after a compressed
+    offload. Level 0 is the identity (the input object, no cast), which
+    is what makes level-0 runs bit-exact with the pre-codec stacks."""
+    if int(level) == 0:
+        return np.asarray(x)
+    words, scales = encode_codec_ref(x, level)
+    return decode_codec_ref(words, scales, np.asarray(x).shape, level)
 
 
 def calib_nll_ref(logits, labels, temperature):

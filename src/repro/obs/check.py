@@ -16,7 +16,8 @@ supposed to guarantee:
    total, and the offload counters match what telemetry stored.
 4. **Trace accounting** -- the sink saw exactly as many records as the
    emitters counted (and, when unsampled, as many as the counters say
-   completed).
+   completed, with the offloaded records' `payload_nbytes` summing to
+   the uplink byte counters).
 5. **Audit causality** (optional) -- a canary rollback is reconstructible
    from the audit log alone: canary start -> QoS trip on a canary cell
    with over-cap (or, for floor SLOs like coverage, under-floor)
@@ -182,6 +183,39 @@ def check_trace_counts(records: Sequence[Dict],
     return errors
 
 
+def check_uplink_bytes(records: Sequence[Dict],
+                       metrics: MetricsRegistry) -> List[str]:
+    """On an UNSAMPLED trace, the per-request `payload_nbytes` of the
+    offloaded records sum exactly to the byte counters the stacks
+    maintain (`serving_uplink_bytes_total`; `fleet_uplink_bytes_total`
+    summed over cells) -- the wire-pricing analogue of request
+    conservation. Sampled traces are skipped: a stride of the records
+    cannot reproduce a total."""
+    errors = []
+    by_source: Dict[str, float] = {}
+    for r in records:
+        if r.get("kind") != "request" or r["on_device"]:
+            continue
+        pn = r.get("payload_nbytes")
+        if pn is None:
+            return []  # legacy trace (pre-codec): nothing to audit
+        src = r.get("source", "?")
+        by_source[src] = by_source.get(src, 0.0) + float(pn)
+    counters = {"fleet": "fleet_uplink_bytes_total",
+                "serving": "serving_uplink_bytes_total"}
+    for src, total in sorted(by_source.items()):
+        if metrics.gauge_value("trace_sample_every", source=src) != 1:
+            continue
+        name = counters.get(src)
+        if name is None:
+            continue
+        want = metrics.counter_total(name)
+        if abs(want - total) > 0.5:
+            errors.append(f"{src}: trace payloads sum to {total:.0f} bytes, "
+                          f"{name} counted {want:.0f}")
+    return errors
+
+
 def check_calibration(sketch,
                       metrics: Optional[MetricsRegistry] = None,
                       trace_records: Optional[Sequence[Dict]] = None,
@@ -328,6 +362,7 @@ def run_checks(trace_records: Optional[Sequence[Dict]] = None,
         errors += check_gate_consistency(trace_records)
         if metrics is not None:
             errors += check_trace_counts(trace_records, metrics)
+            errors += check_uplink_bytes(trace_records, metrics)
     if metrics is not None:
         errors += check_conservation(metrics)
     if calibration is not None:

@@ -68,6 +68,10 @@ _HELP_SEED = {
     "fleet_requests_total": "Requests completed per origin cell.",
     "fleet_offloaded_total": "Fleet requests offloaded to the shared cloud.",
     "fleet_latency_ms": "Fleet end-to-end request latency (ms).",
+    "serving_uplink_bytes_total": "Post-codec payload bytes the serving "
+    "runtime shipped over the uplink.",
+    "fleet_uplink_bytes_total": "Post-codec payload bytes shipped toward "
+    "the cloud per origin cell (uplink and backhaul).",
     "trace_records_total": "Trace records emitted per source.",
     "calibration_ece": "Windowed expected calibration error from the "
     "reliability sketch.",

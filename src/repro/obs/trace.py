@@ -142,10 +142,13 @@ def request_record(
     gate: Optional[Dict] = None,
     cell: Optional[int] = None,
     device: Optional[int] = None,
+    payload_nbytes: Optional[int] = None,
 ) -> Dict:
     """One completed request. `gate` carries the verdict evidence
     (branch, p_tar threshold, confidence, criterion, context, expert);
-    it is None when no gate ran (e.g. cloud-backhauled fleet requests)."""
+    it is None when no gate ran (e.g. cloud-backhauled fleet requests).
+    `payload_nbytes` is the wire size of the shipped activation (post
+    codec) for offloaded requests; None for on-device completions."""
     return {
         "kind": "request",
         "source": source,
@@ -156,6 +159,7 @@ def request_record(
         "complete_s": float(complete_s),
         "latency_s": float(complete_s) - float(arrival_s),
         "on_device": bool(on_device),
+        "payload_nbytes": None if payload_nbytes is None else int(payload_nbytes),
         "gate": gate,
         "spans": spans,
     }

@@ -135,7 +135,21 @@ class OffloadEngine:
             idx = np.nonzero(~mask)[0]
             payload = jax.tree.map(lambda x: x[idx], edge_out["payload"])
             self.stats.offloaded += len(idx)
-            self.stats.payload_bytes += self.payload_nbytes(payload)
+            level = int(getattr(self.plan, "compression_level", 0))
+            if level != 0:
+                # the plan priced this deployment at the codec's wire
+                # bytes; ship the ACTUAL encoded payload (Pallas kernel,
+                # interpret mode off-TPU) and charge its analytic size
+                from repro.kernels import compress
+
+                leaves, treedef = jax.tree.flatten(payload)
+                encs = [compress.encode(x, level) for x in leaves]
+                self.stats.payload_bytes += sum(e.nbytes for e in encs)
+                payload = jax.tree.unflatten(
+                    treedef, [compress.decode(e) for e in encs]
+                )
+            else:
+                self.stats.payload_bytes += self.payload_nbytes(payload)
             cloud_out = self.cloud_step(payload)
             cloud_logits = np.asarray(cloud_out["logits"])
             pred[idx] = np.argmax(cloud_logits, axis=-1)

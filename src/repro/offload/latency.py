@@ -17,8 +17,10 @@ same structure to intra-pod tiered serving (ICI instead of Wi-Fi).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.kernels.compress import LEVELS as COMPRESSION_LEVELS
+from repro.kernels.compress import scaled_payload_nbytes
 from repro.models.convnet import LAYER_TABLE, payload_bytes
 
 
@@ -29,6 +31,13 @@ class LatencyProfile:
     cloud_layer_s: Dict[str, float]  # per-layer cloud compute time (s/sample)
     branch_s: Dict[str, float]  # per-branch head time on the edge
     uplink_bps: float
+    # energy model (defaults so existing profile constructors are
+    # untouched): radio energy per transmitted bit + edge compute power.
+    # 50 nJ/bit is a Wi-Fi-class radio figure; 2 W a mobile SoC under a
+    # conv workload. Energy per request = edge compute J + payload
+    # bits * J/bit -- additive telemetry, never priced into latency.
+    uplink_j_per_bit: float = 50e-9
+    edge_power_w: float = 2.0
 
 
 def _alexnet_layer_flops() -> Dict[str, float]:
@@ -99,17 +108,54 @@ def cloud_time(profile: LatencyProfile, from_branch: int) -> float:
     return sum(profile.cloud_layer_s[l] for l in CLOUD_LAYERS_BY_BRANCH[from_branch])
 
 
-def comm_time(
-    profile: LatencyProfile, from_branch: int, network=None, t: float = 0.0
+def payload_bytes_for(branch: int, level: int = 0) -> int:
+    """THE (branch, level) -> wire bytes entry for the B-AlexNet payloads:
+    the raw float32 activation at level 0 (bit-identical to the paper's
+    pricing), the codec's analytic compressed size otherwise. Every
+    latency/pricing surface reads payload sizes from here instead of
+    recomputing tensor nbytes at call sites."""
+    return scaled_payload_nbytes(payload_bytes(branch), level)
+
+
+def payload_bytes_table(
+    payload_nbytes: Optional[Callable[[int], int]] = None,
+    branches: Tuple[int, ...] = (1, 2),
+    levels: Tuple[int, ...] = COMPRESSION_LEVELS,
+) -> Dict[Tuple[int, int], int]:
+    """Dense (branch, level) -> wire bytes table. `payload_nbytes` maps a
+    branch to its RAW float32 payload size (default: the B-AlexNet
+    activations); compressed levels derive analytically from the codec's
+    wire format, so pricing never touches a tensor."""
+    raw = payload_nbytes or payload_bytes
+    return {
+        (b, l): scaled_payload_nbytes(raw(b), l)
+        for b in branches for l in levels
+    }
+
+
+def energy_per_request_j(
+    profile: LatencyProfile, edge_time_s: float, payload_nbytes: float = 0.0
 ) -> float:
-    """Per-sample uplink time for branch `from_branch`'s activation.
+    """Edge-side energy for one request: compute J + radio J for the
+    shipped payload (0 bytes for an on-device answer)."""
+    return (edge_time_s * profile.edge_power_w
+            + payload_nbytes * 8.0 * profile.uplink_j_per_bit)
+
+
+def comm_time(
+    profile: LatencyProfile, from_branch: int, network=None, t: float = 0.0,
+    level: int = 0,
+) -> float:
+    """Per-sample uplink time for branch `from_branch`'s activation at
+    compression `level` (0 = the raw float32 payload, numerically the
+    paper's constant).
 
     With `network` (a `repro.serving.network.NetworkModel`) the transfer is
     priced at the link's instantaneous rate at time `t`; the default is the
     profile's fixed uplink -- the paper's 18.8 Mbps constant, numerically
     unchanged.
     """
-    nbytes = payload_bytes(from_branch)
+    nbytes = payload_bytes_for(from_branch, level)
     if network is None:
         return nbytes * 8.0 / profile.uplink_bps
     return network.comm_time(nbytes, t)

@@ -78,6 +78,7 @@ class OnlineController:
             plan, profile, exit_logits,
             final_logits=final_logits, labels=labels,
             payload_nbytes=payload_nbytes,
+            compression_levels=self.config.compression_levels,
         )
         if self.config.max_reliability_gap is not None and not self.core.has_labels:
             raise ValueError(
@@ -126,6 +127,7 @@ class OnlineController:
             edge_times_s=edge_times,
             arrival_rate_hz=rate_hz,
             p_tar_grid=cfg.p_tar_grid,
+            branches=cfg.branches,
             min_accuracy=cfg.min_accuracy,
             max_reliability_gap=cfg.max_reliability_gap,
             sample_weight=weight,
@@ -151,8 +153,11 @@ class OnlineController:
                 arrival_rate_hz=None if rate_hz is None else float(rate_hz),
                 held=bool(held),
                 changed=bool(candidate.exit_index != prev.exit_index
-                             or candidate.p_tar != prev.p_tar),
+                             or candidate.p_tar != prev.p_tar
+                             or candidate.compression_level
+                             != prev.compression_level),
                 chosen={"branch": candidate.exit_index + 1,
-                        "p_tar": float(candidate.p_tar)},
+                        "p_tar": float(candidate.p_tar),
+                        "compression_level": int(candidate.compression_level)},
             )
         return candidate

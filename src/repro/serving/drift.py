@@ -251,6 +251,13 @@ class ContextualLogitsCore:
             ctx: np.argmax(np.asarray(z), axis=-1)
             for ctx, z in final_logits_by_context.items()
         }
+        # retained for lazy per-codec-level cloud tables (see cloud_predict)
+        self._final_logits = {
+            ctx: np.asarray(z) for ctx, z in final_logits_by_context.items()
+        }
+        self._final_pred_by_level: Dict[int, Dict[str, np.ndarray]] = {
+            0: self.final_pred
+        }
         self.labels = None if labels is None else np.asarray(labels)
         self.n_samples = int(next(iter(self.final_pred.values())).shape[0])
 
@@ -267,9 +274,22 @@ class ContextualLogitsCore:
         return bool(conf >= p_tar), pred, float(conf), ctx, est
 
     def cloud_predict(self, sample: int, branch: int,
-                      context: Optional[str] = None) -> int:
+                      context: Optional[str] = None, level: int = 0) -> int:
+        """Main-head prediction for an offloaded sample. `level` is the
+        codec level the payload shipped at: non-zero levels round-trip the
+        stored final logits through the `kernels.ref` oracle once per
+        (level, context) -- the same accuracy-delta model the controller
+        priced at fit time. Level 0 is the untouched legacy table."""
         ctx = self.ctx_keys[0] if context is None else context
-        return int(self.final_pred[ctx][sample])
+        level = int(level)
+        if level not in self._final_pred_by_level:
+            from repro.kernels.ref import roundtrip_codec_ref
+
+            self._final_pred_by_level[level] = {
+                c: np.argmax(roundtrip_codec_ref(z, level), axis=-1)
+                for c, z in self._final_logits.items()
+            }
+        return int(self._final_pred_by_level[level][ctx][sample])
 
     def correct(self, sample: int, prediction: int) -> Optional[bool]:
         if self.labels is None:

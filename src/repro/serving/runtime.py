@@ -78,6 +78,8 @@ class LogitsCore:
             self.pred[b] = np.asarray(p)
             self.ent[b] = np.asarray(e, np.float64)
         self.final_pred = np.argmax(np.asarray(final_logits), axis=-1)
+        self._final_logits = np.asarray(final_logits)
+        self._final_pred_by_level: Dict[int, np.ndarray] = {}
         self.labels = None if labels is None else np.asarray(labels)
         self.n_samples = int(self.final_pred.shape[0])
 
@@ -90,10 +92,21 @@ class LogitsCore:
             on_device = bool(conf >= p_tar)
         return on_device, int(self.pred[branch][sample]), float(conf)
 
-    def cloud_predict(self, sample: int, branch: int) -> int:
+    def cloud_predict(self, sample: int, branch: int, level: int = 0) -> int:
         # every cloud path computes the same main head, whichever branch
-        # the split happened at
-        return int(self.final_pred[sample])
+        # the split happened at; a non-zero codec level round-trips the
+        # stored final logits through the kernels.ref oracle (lazily, once
+        # per level) -- the fit-time accuracy-delta model, made live
+        level = int(level)
+        if level == 0:
+            return int(self.final_pred[sample])
+        if level not in self._final_pred_by_level:
+            from repro.kernels.ref import roundtrip_codec_ref
+
+            self._final_pred_by_level[level] = np.argmax(
+                roundtrip_codec_ref(self._final_logits, level), axis=-1
+            )
+        return int(self._final_pred_by_level[level][sample])
 
     def correct(self, sample: int, prediction: int) -> Optional[bool]:
         if self.labels is None:
@@ -147,8 +160,16 @@ class EngineCore:
             self._payload[(sample, branch)] = edge_out["payload"]
         return on_device, pred, conf
 
-    def cloud_predict(self, sample: int, branch: int) -> int:
+    def cloud_predict(self, sample: int, branch: int, level: int = 0) -> int:
         payload = self._payload[(sample, branch)]
+        if int(level) != 0:
+            # the REAL codec on the real activation: what the cloud
+            # partition actually receives after a compressed offload
+            from repro.kernels import compress
+
+            payload = self._jax.tree.map(
+                lambda x: compress.roundtrip(x, int(level)), payload
+            )
         out = self.engines[branch].cloud_step(payload)
         return int(np.argmax(np.asarray(out["logits"]), axis=-1)[0])
 
@@ -177,7 +198,8 @@ class _Pending:
     confidence: float
     edge_start_s: float
     edge_done_s: float
-    payload_nbytes: int
+    payload_nbytes: int  # WIRE bytes at the deployed codec level
+    compression_level: int = 0  # codec level the payload shipped at
     context: Optional[str] = None  # true distortion context at gate time
     est_context: Optional[str] = None  # what the edge-side estimator said
     # EDGE prediction's correctness captured at gate time (before the
@@ -246,6 +268,7 @@ class ServingRuntime:
 
         self.branch = plan.exit_index + 1
         self.p_tar = float(plan.p_tar)
+        self.level = int(getattr(plan, "compression_level", 0))
         if self.branch not in core.branches:
             raise ValueError(
                 f"plan deploys branch {self.branch} but the core only "
@@ -325,13 +348,26 @@ class ServingRuntime:
         # capture the WHOLE configuration now: a controller tick during the
         # service must not pair this branch's logits with a p_tar tuned for
         # another branch
-        branch, p_tar = self.branch, self.p_tar
+        branch, p_tar, level = self.branch, self.p_tar, self.level
         service = L.edge_time(self.profile, branch)
-        self._push(t + service, self._on_edge_done, req, d, t, branch, p_tar)
+        self._push(
+            t + service, self._on_edge_done, req, d, t, branch, p_tar, level
+        )
+
+    def _payload_nbytes_for(self, branch: int, level: int) -> int:
+        """Wire bytes for one offload: the raw activation size at level 0
+        (the caller-supplied table untouched -- bit-exact legacy pricing),
+        the codec's analytic size otherwise."""
+        raw = self.payload_nbytes(branch)
+        if level == 0:
+            return raw
+        from repro.kernels.compress import scaled_payload_nbytes
+
+        return scaled_payload_nbytes(raw, level)
 
     def _on_edge_done(
         self, t: float, req: Request, d: int, start_s: float, branch: int,
-        p_tar: float,
+        p_tar: float, level: int = 0,
     ) -> None:
         if self._contextual:
             on_device, pred, conf, ctx, est = self.core.gate(
@@ -362,6 +398,7 @@ class ServingRuntime:
                     deadline_s=req.deadline_s,
                     context=ctx,
                     est_context=est,
+                    energy_j=L.energy_per_request_j(self.profile, t - start_s),
                 )
             )
             if self.obs is not None and self.obs.enabled:
@@ -370,7 +407,9 @@ class ServingRuntime:
                                        edge_correct=ok)
         else:
             p = _Pending(req, branch, p_tar, conf, start_s, t,
-                         self.payload_nbytes(branch), ctx, est)
+                         self._payload_nbytes_for(branch, level),
+                         compression_level=level, context=ctx,
+                         est_context=est)
             if self.obs is not None and self.obs.enabled:
                 # the edge branch's own verdict, evaluated before the
                 # cloud main head replaces the answer: the calibration
@@ -400,6 +439,8 @@ class ServingRuntime:
         batch, self._batch = self._batch, []
         self._batch_epoch += 1
         nbytes = sum(p.payload_nbytes for p in batch)
+        if self._metrics is not None:
+            self._metrics.inc("serving_uplink_bytes_total", nbytes)
         start = max(t, self._uplink_free_s)
         # observation timestamped NOW (flush time), not at the transfer's
         # start: under backlog `start` lies in the future and a sample
@@ -431,9 +472,11 @@ class ServingRuntime:
                 # the cloud main head also sees the distorted input, so its
                 # prediction is conditioned on the gate-time true context
                 pred = self.core.cloud_predict(p.request.sample, p.branch,
-                                               p.context)
+                                               p.context,
+                                               level=p.compression_level)
             else:
-                pred = self.core.cloud_predict(p.request.sample, p.branch)
+                pred = self.core.cloud_predict(p.request.sample, p.branch,
+                                               level=p.compression_level)
             self.telemetry.add(
                 RequestRecord(
                     req_id=p.request.req_id,
@@ -449,6 +492,10 @@ class ServingRuntime:
                     deadline_s=p.request.deadline_s,
                     context=p.context,
                     est_context=p.est_context,
+                    energy_j=L.energy_per_request_j(
+                        self.profile, p.edge_done_s - p.edge_start_s,
+                        p.payload_nbytes,
+                    ),
                 )
             )
             if self.obs is not None and self.obs.enabled:
@@ -460,6 +507,8 @@ class ServingRuntime:
                     uplink_done_s=p.uplink_done_s,
                     cloud_start_s=p.cloud_start_s, complete_s=t,
                     edge_correct=p.edge_correct,
+                    payload_nbytes=p.payload_nbytes,
+                    level=p.compression_level,
                 )
 
     # -------------------------------------------------------- observability
@@ -471,6 +520,8 @@ class ServingRuntime:
         cloud_start_s: Optional[float] = None,
         complete_s: Optional[float] = None,
         edge_correct: Optional[bool] = None,
+        payload_nbytes: Optional[int] = None,
+        level: int = 0,
     ) -> None:
         """Trace + metrics for one completed request (sinks attached)."""
         from repro.obs import build_spans, request_record
@@ -497,12 +548,14 @@ class ServingRuntime:
             "est_context": est,
             "correct": None if edge_correct is None else int(edge_correct),
         }
+        if not on_device:
+            gate["compression_level"] = int(level)
         spans = build_spans(req.arrival_s, edge_start_s, edge_done_s,
                             uplink_start_s, uplink_done_s, cloud_start_s,
                             complete_s)
         self._trace.emit(request_record(
             "serving", req.req_id, req.arrival_s, complete, on_device,
-            spans, gate=gate, device=d))
+            spans, gate=gate, device=d, payload_nbytes=payload_nbytes))
         if self._metrics is not None:
             self._metrics.inc("trace_records_total", source="serving")
 
@@ -511,10 +564,13 @@ class ServingRuntime:
         new_plan = self.controller.update(t, self.telemetry)
         new_branch = new_plan.exit_index + 1  # validated against the core at init
         new_p_tar = float(new_plan.p_tar)
+        new_level = int(getattr(new_plan, "compression_level", 0))
         if new_branch != self.branch:
             self._flush_batch(t)  # pending batch was gated under the old config
-        if new_branch != self.branch or new_p_tar != self.p_tar:
-            self.telemetry.record_controller(t, new_branch, new_p_tar)
-        self.branch, self.p_tar = new_branch, new_p_tar
+        if (new_branch != self.branch or new_p_tar != self.p_tar
+                or new_level != self.level):
+            self.telemetry.record_controller(t, new_branch, new_p_tar,
+                                             level=new_level)
+        self.branch, self.p_tar, self.level = new_branch, new_p_tar, new_level
         if self._heap:  # more simulation ahead (requests in flight/queued)
             self._push(t + self.controller.interval_s, self._on_controller_tick)

@@ -45,6 +45,9 @@ class RequestRecord:
     deadline_s: Optional[float] = None
     context: Optional[str] = None  # true distortion context at gate time
     est_context: Optional[str] = None  # edge-side estimator's verdict
+    # edge-side energy (compute J + radio J for the shipped payload; see
+    # `repro.offload.latency.energy_per_request_j`); None on legacy paths
+    energy_j: Optional[float] = None
 
     @property
     def latency_s(self) -> float:
@@ -70,7 +73,8 @@ class Telemetry:
         self.bandwidth_samples: List[Tuple[float, float]] = []  # (t, bps)
         self.queue_samples: List[Tuple[float, float]] = []  # (t, mean per-device depth)
         self.context_samples: List[Tuple[float, str]] = []  # (t, context key)
-        self.controller_events: List[Tuple[float, int, float]] = []  # (t, branch, p_tar)
+        # (t, branch, p_tar, compression_level) per adopted switch
+        self.controller_events: List[Tuple[float, int, float, int]] = []
 
     # ------------------------------------------------------------ ingest
     def add(self, record: RequestRecord) -> None:
@@ -91,8 +95,10 @@ class Telemetry:
         controller windows into a traffic-mix estimate."""
         self.context_samples.append((t, context))
 
-    def record_controller(self, t: float, branch: int, p_tar: float) -> None:
-        self.controller_events.append((t, branch, p_tar))
+    def record_controller(
+        self, t: float, branch: int, p_tar: float, level: int = 0
+    ) -> None:
+        self.controller_events.append((t, branch, p_tar, int(level)))
 
     # ----------------------------------------------------------- reports
     def latencies(self) -> np.ndarray:
@@ -129,6 +135,13 @@ class Telemetry:
     def accuracy(self) -> float:
         known = [r.correct for r in self.records if r.correct is not None]
         return float(np.mean(known)) if known else float("nan")
+
+    @property
+    def energy_j_total(self) -> float:
+        """Total edge-side energy over records that carry it (0.0 when no
+        path stamped energy -- legacy simulators)."""
+        return float(sum(r.energy_j for r in self.records
+                         if r.energy_j is not None))
 
     @property
     def mean_queue_depth(self) -> float:
@@ -276,4 +289,5 @@ class Telemetry:
             "throughput_rps": self.throughput_rps,
             "controller_switches": len(self.controller_events),
             "miscalibration_gap": self.miscalibration_gap(),
+            "energy_j_total": self.energy_j_total,
         }

@@ -311,7 +311,8 @@ def test_fleet_controller_concedes_only_under_distress(drift_data):
             return np.full(k, 1.0 / k)
 
     decisions = ctrl.update(1.0, Tel())
-    (b0, p0), (b1, p1) = decisions
+    (b0, p0, l0), (b1, p1, l1) = decisions
+    assert l0 == 0 and l1 == 0  # no codec axis configured: level 0 held
     assert p0 == bank.default_plan.p_tar  # healthy link: contract held
     assert p1 < bank.default_plan.p_tar  # distressed link: conceded
     assert p1 in (0.3, 0.5, 0.7)
@@ -373,8 +374,8 @@ def test_fleet_controller_shared_cloud_cap(drift_data):
 
     free = decisions(rho_max=None)
     capped = decisions(rho_max=0.01)
-    total_off_free = sum(_offload_at(bank, val, b, p) for b, p in free)
-    total_off_capped = sum(_offload_at(bank, val, b, p) for b, p in capped)
+    total_off_free = sum(_offload_at(bank, val, b, p) for b, p, _ in free)
+    total_off_capped = sum(_offload_at(bank, val, b, p) for b, p, _ in capped)
     assert total_off_capped < total_off_free
 
 
